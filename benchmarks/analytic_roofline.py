@@ -1,0 +1,46 @@
+"""Analytic roofline table (all 32 single-pod cells) — the primary §Roofline
+artifact; see repro/perf/roofline_model.py for why HLO cost_analysis alone
+is insufficient on the CPU dry-run host."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import SHAPES, applicable
+from repro.models.registry import ARCH_IDS, get_config
+from repro.perf.roofline_model import Plan, roofline
+
+
+def rows(plan: Plan = None):
+    plan = plan or Plan()
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            if not applicable(cfg, s):
+                continue
+            out.append(roofline(cfg, s, plan))
+    return out
+
+
+def table(rs) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'bound':>11s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rs:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['t_compute_s']:10.4f} "
+            f"{r['t_memory_s']:10.4f} {r['t_collective_s']:10.4f} "
+            f"{r['bound']:>11s} {100*r['roofline_frac']:7.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    rs = rows()
+    print(table(rs))
+    os.makedirs("artifacts", exist_ok=True)
+    json.dump(rs, open("artifacts/roofline_analytic.json", "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape), single-pod mesh:
+  compute term    = HLO_FLOPs_per_dev / peak_FLOP/s        (cost_analysis)
+  memory term     = HLO_bytes_per_dev / HBM_bw             (cost_analysis)
+  collective term = collective_bytes_per_dev / link_bw     (HLO parse)
+(cost_analysis / memory_analysis / as_text are all per-device after SPMD
+partitioning — verified in tests/test_dryrun_units.py.)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load(art_dir: str = "artifacts/dryrun", mesh: str = "single",
+         tag: str = ""):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, f"*_{mesh}{tag}.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        rows.append(analyse(r))
+    return rows
+
+
+def analyse(r: dict) -> dict:
+    flops = r["cost"].get("flops", 0.0)
+    bytes_acc = r["cost"].get("bytes accessed", 0.0)
+    coll = sum(v["bytes"] for v in r.get("collectives", {}).values()
+               if isinstance(v, dict))
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_acc / HBM_BW
+    t_x = coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    n_dev = r.get("n_devices", 256)
+    useful = r["model_flops"] / (flops * n_dev) if flops else 0.0
+    # roofline fraction: useful model FLOPs per chip over what the dominant
+    # bound allows in the same wall-clock
+    t_bound = max(terms.values()) or 1e-30
+    frac = (r["model_flops"] / n_dev / PEAK_FLOPS) / t_bound
+    return {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "bound": dom, "model_flops": r["model_flops"],
+            "hlo_flops_per_dev": flops, "useful_flop_ratio": useful,
+            "roofline_frac": frac,
+            "temp_gib": r.get("memory", {}).get("temp_size_in_bytes", 0)
+            / 2**30,
+            "collectives": r.get("collectives", {})}
+
+
+def table(rows) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'bound':>10s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'temp_GiB':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['t_compute_s']:10.4f} "
+            f"{r['t_memory_s']:10.4f} {r['t_collective_s']:10.4f} "
+            f"{r['bound']:>10s} {r['useful_flop_ratio']:7.3f} "
+            f"{100*r['roofline_frac']:7.2f} {r['temp_gib']:9.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    print(table(rows))
+    out = "artifacts/roofline_single.json"
+    os.makedirs("artifacts", exist_ok=True)
+    json.dump(rows, open(out, "w"), indent=1)
+    print(f"\nwrote {out} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

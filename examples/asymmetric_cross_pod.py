@@ -1,0 +1,59 @@
+"""The paper's technique at the framework layer: asymmetric cross-pod
+synchronization of sparsely-updated parameter banks (MoE experts /
+embedding rows).
+
+Each simulated pod locally updates the expert blocks its batch routed to
+(the pod is the *local sharer* of those blocks).  A periodic global sync is
+the *remote acquire*: sRSP-selective sync flushes only the union of dirty
+blocks; the RSP-baseline analogue all-reduces the whole bank.
+
+  PYTHONPATH=src python examples/asymmetric_cross_pod.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.hier_sync import bank_init, make_pod_sync
+
+
+def main():
+    n_pods = 4
+    mesh = Mesh(np.array(jax.devices()[:n_pods]).reshape(n_pods), ("pod",))
+    rng = np.random.default_rng(0)
+
+    # a 32-expert FFN bank: [n_blocks=32 experts, block=4096 words]
+    nb, bs = 32, 4096
+    base = rng.normal(size=(nb, bs)).astype(np.float32)
+    banks = np.broadcast_to(base, (n_pods, nb, bs)).copy()
+    print("local steps: each pod trains on its own shard; routing touches")
+    for pod in range(n_pods):
+        experts = rng.choice(nb, size=3, replace=False)  # top-k routing hits
+        banks[pod, experts] += 0.01 * rng.normal(size=(3, bs))
+        print(f"  pod{pod}: experts {sorted(experts.tolist())}")
+
+    sh = lambda x: jax.device_put(x, NamedSharding(
+        mesh, P(*(("pod",) + (None,) * (x.ndim - 1)))))
+    st = jax.tree.map(sh, jax.vmap(bank_init)(
+        jnp.asarray(np.broadcast_to(base, (n_pods, nb, bs)).copy())))
+    banks_j = sh(jnp.asarray(banks))
+
+    print("\nremote acquire (global sync):")
+    for name, selective in (("sRSP selective", True), ("full all-reduce", False)):
+        sync = make_pod_sync(mesh, nb, bs, max_dirty=16, selective=selective)
+        new_bank, new_st = sync(banks_j, st)
+        err = float(jnp.abs(new_bank[0] - jnp.asarray(banks.mean(0))).max())
+        moved = float(np.asarray(new_st.bytes_selective)[0])
+        print(f"  {name:16s}: bytes_moved={moved/2**20:7.2f} MiB  "
+              f"|result - true_mean| = {err:.2e}")
+    print("\nsame result, ~{:.0f}x fewer cross-pod bytes for the sparse bank"
+          .format(nb / 16))
+
+
+if __name__ == "__main__":
+    main()

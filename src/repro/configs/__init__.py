@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoECfg, MLACfg, SSMCfg, ShapeCfg, SHAPES,
+)

@@ -1,0 +1,166 @@
+"""Config schema: architectures and input-shape cells.
+
+Every assigned architecture has a module ``repro/configs/<id>.py`` exposing
+``CONFIG`` (exact published scale) and ``SMOKE`` (reduced same-family config
+for CPU tests).  Input shapes are the four assigned cells; `applicable`
+encodes the documented skips (DESIGN.md §4)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # dispatch groups (aligned with data shards -> communication-free
+    # dispatch; the combine is the only cross-shard reduction). §Perf.
+    dispatch_groups: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str            # dense | moe | vlm | ssm_xlstm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    partial_rotary: float = 1.0
+    norm: str = "rmsnorm"   # rmsnorm | layernorm
+    act: str = "swiglu"     # swiglu | gelu
+    tie_embeddings: bool = False
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    ssm: Optional[SSMCfg] = None
+    attn_every: int = 0     # hybrid: shared attention applied every k layers
+    enc_layers: int = 0     # encdec: encoder depth (n_layers = decoder depth)
+    n_patches: int = 0      # vlm: image patch embeddings replacing a prefix
+    mtp_heads: int = 0      # deepseek multi-token-prediction extra heads
+    xlstm_pattern: str = "" # e.g. "msmsmsmsmsms" (m=mLSTM, s=sLSTM)
+    # training knobs
+    dtype: str = "bfloat16"
+    microbatch: Optional[int] = None   # per train_4k cell; None = no accum
+    optimizer: str = "adamw"           # adamw | adafactor
+    # distribution knobs (hillclimbed in EXPERIMENTS.md §Perf)
+    seq_parallel: bool = False         # Megatron-style SP on the residual
+    remat_policy: str = "full"         # full | dots (selective)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> float:
+        """Analytic parameter count (for 6·N·D roofline bookkeeping)."""
+        d, L = self.d_model, self.n_layers
+        n = 2 * self.vocab * d if not self.tie_embeddings else self.vocab * d
+        if self.family == "ssm_xlstm":
+            # rough: mLSTM/sLSTM blocks ~ 8*d^2 per layer incl. up/down proj
+            return n + L * 13 * d * d
+        ff_mult0 = 3 if self.act == "swiglu" else 2
+        if self.family == "hybrid" and self.ssm is not None:
+            # Mamba2 layers + ONE shared attention+FFN block
+            s = self.ssm
+            di = s.expand * d
+            h = di // s.head_dim
+            per_mamba = d * (2 * di + 2 * s.n_groups * s.d_state + h) + di * d
+            hd = self.hd
+            shared = (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                      + self.n_heads * hd * d + ff_mult0 * d * self.d_ff)
+            return float(n + L * per_mamba + shared)
+        per_layer = 0.0
+        hd = self.hd
+        if self.mla is not None:
+            m = self.mla
+            per_layer += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * (
+                m.qk_nope_head_dim + m.qk_rope_head_dim)
+            per_layer += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            per_layer += m.kv_lora_rank * self.n_heads * (
+                m.qk_nope_head_dim + m.v_head_dim)
+            per_layer += self.n_heads * m.v_head_dim * d
+        else:
+            per_layer += d * self.n_heads * hd          # wq
+            per_layer += 2 * d * self.n_kv_heads * hd   # wk, wv
+            per_layer += self.n_heads * hd * d          # wo
+        ff_mult = 3 if self.act == "swiglu" else 2
+        if self.moe is not None:
+            mo = self.moe
+            moe_layers = L - mo.first_k_dense
+            per_layer_ff = mo.n_experts * ff_mult * d * mo.d_expert \
+                + mo.n_shared * ff_mult * d * mo.d_expert + d * mo.n_experts
+            n += moe_layers * per_layer_ff + mo.first_k_dense * ff_mult * d * self.d_ff
+        else:
+            n += L * ff_mult * d * self.d_ff
+        n += L * per_layer
+        if self.enc_layers:
+            n += self.enc_layers * (per_layer + ff_mult * d * self.d_ff)
+        return float(n)
+
+    def active_param_count(self) -> float:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        mo = self.moe
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        ff_mult = 3 if self.act == "swiglu" else 2
+        moe_layers = L - mo.first_k_dense
+        all_experts = moe_layers * mo.n_experts * ff_mult * d * mo.d_expert
+        active = moe_layers * mo.top_k * ff_mult * d * mo.d_expert
+        return full - all_experts + active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+# pure full-attention archs skip long_500k (needs sub-quadratic sequence
+# state; DESIGN.md §4) — SSM / hybrid archs run it.
+LONG_CAPABLE_FAMILIES = {"ssm_xlstm", "hybrid"}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeCfg) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in LONG_CAPABLE_FAMILIES
+    return True

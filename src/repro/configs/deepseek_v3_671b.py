@@ -1,0 +1,27 @@
+"""deepseek-v3-671b — MoE+MLA, 61L d=7168 128H d_expert=2048 vocab=129280,
+1 shared + 256 routed experts top-8, MLA latent KV, MTP depth 1, first 3
+layers dense (d_ff=18432).  [arXiv:2412.19437.]
+Trains with adafactor + FSDP + microbatch 8 (memory: EXPERIMENTS.md §Dry-run)."""
+import dataclasses
+
+from repro.configs.base import ModelConfig, MoECfg, MLACfg
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, d_ff=18432,
+    vocab=129280,
+    moe=MoECfg(n_experts=256, top_k=8, d_expert=2048, n_shared=1,
+               first_k_dense=3, capacity_factor=1.25),
+    mla=MLACfg(q_lora_rank=1536, kv_lora_rank=512, qk_nope_head_dim=128,
+               qk_rope_head_dim=64, v_head_dim=128),
+    mtp_heads=1, microbatch=32, optimizer="adafactor",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab=512,
+    moe=MoECfg(n_experts=4, top_k=2, d_expert=32, n_shared=1, first_k_dense=1),
+    mla=MLACfg(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+               qk_rope_head_dim=8, v_head_dim=16),
+    dtype="float32",
+)

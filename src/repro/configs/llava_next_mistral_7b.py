@@ -1,0 +1,19 @@
+"""llava-next-mistral-7b — VLM, mistral-7b backbone: 32L d=4096 32H (GQA
+kv=8) d_ff=14336 vocab=32000.  [hf:llava-hf/llava-v1.6-mistral-7b-hf.]
+Modality frontend is a STUB: input_specs supplies precomputed patch
+embeddings [B, 576, 1024] (anyres tiling NOT modeled — DESIGN.md §4)."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=32000, head_dim=128, rope_theta=1e6, n_patches=576,
+    microbatch=64, optimizer="adamw",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab=512, head_dim=16, n_patches=4, microbatch=None, dtype="float32",
+)

@@ -1,0 +1,18 @@
+"""mistral-large-123b — dense, 88L d=12288 96H (GQA kv=8) d_ff=28672
+vocab=32768.  [hf:mistralai/Mistral-Large-Instruct-2407; unverified.]
+Memory-heavy: trains with adafactor + FSDP + microbatch 8."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8, d_ff=28672,
+    vocab=32768, head_dim=128, rope_theta=1e6,
+    microbatch=32, optimizer="adafactor",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab=512, head_dim=16, microbatch=None, dtype="float32",
+)

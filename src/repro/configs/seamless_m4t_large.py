@@ -1,0 +1,20 @@
+"""seamless-m4t-large-v2 — enc-dec, 24L enc + 24L dec, d=1024 16H (kv=16)
+d_ff=8192 vocab=256206.  [arXiv:2308.11596.]
+Modality frontend is a STUB: input_specs supplies precomputed frame
+embeddings [B, S_enc, 1024]; encoder length = seq (train/prefill) or seq//8
+(decode cells) — DESIGN.md §4."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    n_layers=24, enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab=256206, head_dim=64, norm="layernorm", act="gelu",
+    microbatch=64, optimizer="adamw",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512, head_dim=16, microbatch=None, dtype="float32",
+)

@@ -1,0 +1,17 @@
+"""stablelm-12b — dense, 40L d=5120 32H (GQA kv=8) d_ff=13824 vocab=100352.
+[hf:stabilityai/stablelm-2-12b family; partial rotary 25%, LayerNorm.]"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=13824,
+    vocab=100352, head_dim=160, partial_rotary=0.25, norm="layernorm",
+    act="swiglu", rope_theta=10000.0, microbatch=64, optimizer="adamw",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab=512, head_dim=16, microbatch=None, dtype="float32",
+)

@@ -1,0 +1,17 @@
+"""xlstm-125m — sLSTM + mLSTM blocks, 12L d=768 4H vocab=50304.
+[arXiv:2405.04517; alternating m/s pattern.]  long_500k capable (O(1) state)."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m", family="ssm_xlstm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab=50304, xlstm_pattern="msmsmsmsmsms",
+    microbatch=64, optimizer="adamw",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=2, vocab=512,
+    xlstm_pattern="ms", dtype="float32",
+)

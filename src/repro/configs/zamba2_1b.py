@@ -1,0 +1,24 @@
+"""zamba2-1.2b — hybrid, 38 Mamba2 layers d=2048 + shared attention block
+(32H, d_ff=8192) applied every 6 layers, ssm_state=64, vocab=32000.
+[arXiv:2411.15242.]  long_500k capable (Mamba2 O(1) state; shared-attn KV
+sharded over 'seqs')."""
+import dataclasses
+
+from repro.configs.base import ModelConfig, SSMCfg
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=32000, head_dim=64, attn_every=6,
+    ssm=SSMCfg(d_state=64, d_conv=4, expand=2, head_dim=64, n_groups=1,
+               chunk=128),
+    microbatch=64, optimizer="adamw",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab=512, head_dim=16, attn_every=2,
+    ssm=SSMCfg(d_state=16, d_conv=4, expand=2, head_dim=16, n_groups=1,
+               chunk=16),
+    microbatch=None, dtype="float32",
+)

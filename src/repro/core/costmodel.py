@@ -1,0 +1,85 @@
+"""Cost model calibrated to the paper's Table 1 (gem5-APU configuration).
+
+The paper evaluates on a cycle-accurate simulator; this framework replaces
+it with a deterministic analytic cost model attached to the functional
+protocol.  Latencies come straight from Table 1:
+
+  L1 data cache: 4-cycle latency, 16-entry sFIFO, 64B blocks
+  L2 cache:     24-cycle latency, 24-entry sFIFO
+  DRAM:         DDR3 8-channel 500 MHz  -> ~150 core cycles modeled
+  protocol:     no-allocate, write-combining
+
+Charging rules (DESIGN.md §2 "cost model honesty"):
+  * every op charges cycles to the issuing cache's accumulator;
+  * selective/full flush also charges the *victim* cache (its L1 is busy)
+    and the issuer waits for completion (paper §4.2 step 4 feedback);
+  * `l2_accesses` counts data-carrying L2 transactions (fills, block
+    writebacks, L2 atomics) — the bandwidth proxy used by Fig. 5;
+  * probes / NACKs are control messages, counted separately.
+
+Makespan of a run = max over caches of per-cache cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    # Table 1 latencies (cycles)
+    l1_lat: float = 4.0
+    l2_lat: float = 24.0
+    dram_lat: float = 150.0
+    # throughput terms
+    wb_per_block: float = 4.0      # pipelined writeback issue per 64B block
+    inv_flash: float = 1.0         # single-cycle flash invalidate (§2.2)
+    probe_lat: float = 8.0         # selective-flush / inv probe hop
+    tbl_lat: float = 1.0           # LR/PA CAM lookup
+    # work model for the work-stealing apps (cycles)
+    task_base: float = 20.0
+    per_edge: float = 6.0
+
+
+class Counters(NamedTuple):
+    cycles: jnp.ndarray        # [n_caches] f32 per-cache busy cycles
+    l2_accesses: jnp.ndarray   # [] f32 data transactions at L2 (Fig. 5 metric)
+    wb_blocks: jnp.ndarray     # [] f32 blocks written back (flush traffic)
+    inv_full: jnp.ndarray      # [] f32 whole-cache invalidations
+    inv_per_cache: jnp.ndarray # [n_caches] f32 invalidations per cache (cold-miss model)
+    probes: jnp.ndarray        # [] f32 control probes sent
+    promotions: jnp.ndarray    # [] f32 promoted local acquires (PA-TBL hits)
+    local_syncs: jnp.ndarray   # [] f32
+    remote_syncs: jnp.ndarray  # [] f32
+    global_syncs: jnp.ndarray  # [] f32
+    l1_hits: jnp.ndarray       # [] f32
+    l1_misses: jnp.ndarray     # [] f32
+    steals: jnp.ndarray        # [] f32
+
+
+def make_counters(n_caches: int) -> Counters:
+    z = jnp.float32(0.0)
+    return Counters(cycles=jnp.zeros((n_caches,), jnp.float32),
+                    l2_accesses=z, wb_blocks=z, inv_full=z,
+                    inv_per_cache=jnp.zeros((n_caches,), jnp.float32),
+                    probes=z, promotions=z, local_syncs=z, remote_syncs=z,
+                    global_syncs=z, l1_hits=z, l1_misses=z, steals=z)
+
+
+def charge(c: Counters, cid, cyc) -> Counters:
+    return c._replace(cycles=c.cycles.at[cid].add(jnp.float32(cyc)))
+
+
+def charge_all(c: Counters, cyc) -> Counters:
+    return c._replace(cycles=c.cycles + jnp.float32(cyc))
+
+
+def bump(c: Counters, **kw) -> Counters:
+    return c._replace(**{k: getattr(c, k) + jnp.float32(v) for k, v in kw.items()})
+
+
+def makespan(c: Counters) -> jnp.ndarray:
+    return jnp.max(c.cycles)

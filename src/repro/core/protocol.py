@@ -1,0 +1,459 @@
+"""Functional model of the sRSP / RSP scoped-synchronization protocols (paper §2–4).
+
+The memory system is modeled at word granularity over a shared L2 (the
+global synchronization point) and N private L1 caches, exactly the
+write-combining, no-allocate hierarchy of the paper's Table 1:
+
+    Store.l2      [n_words]            word values at the L2 sync point
+    Store.l1      [n_caches, n_words]  per-cache cached word values
+    Store.wvalid  [n_caches, n_words]  local copy is readable
+    Store.wdirty  [n_caches, n_words]  local copy not yet written back
+    Store.fifo    batched SFifo        dirty-block FIFO  (QuickRelease)
+    Store.lr      batched LRTbl        sRSP local-release table
+    Store.pa      batched PATbl        sRSP promoted-acquire table
+
+All operations are pure `(store, ...) -> (store', ...)` functions and fully
+jittable; the cost model charges cycles/L2-transactions as a side channel in
+`store.counters`.  Stale data is *really modeled*: an L1 may hold an old
+copy of a word while L2 has moved on — a protocol bug shows up as a wrong
+value read by a work-stealer, which the integration tests catch end-to-end.
+
+Invariant maintained (checked by property tests): every dirty word's block
+is present in that cache's sFIFO, so a FIFO drain is a complete flush.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import sfifo, tables
+from repro.core.costmodel import CostParams, Counters, make_counters
+
+INVALID = jnp.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtoConfig:
+    n_caches: int
+    n_words: int
+    block_words: int = 16      # 64B block / 4B word (Table 1)
+    fifo_cap: int = 16         # L1 sFIFO entries (Table 1)
+    lr_cap: int = 8
+    pa_cap: int = 8
+    params: CostParams = dataclasses.field(default_factory=CostParams)
+
+    @property
+    def n_blocks(self) -> int:
+        return (self.n_words + self.block_words - 1) // self.block_words
+
+
+class Store(NamedTuple):
+    l2: jnp.ndarray
+    l1: jnp.ndarray
+    wvalid: jnp.ndarray
+    wdirty: jnp.ndarray
+    fifo: sfifo.SFifo      # leaves have leading [n_caches]
+    lr: tables.LRTbl
+    pa: tables.PATbl
+    counters: Counters
+
+
+def make_store(cfg: ProtoConfig) -> Store:
+    n, w = cfg.n_caches, cfg.n_words
+    stack = lambda t: jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), t)
+    return Store(
+        l2=jnp.zeros((w,), jnp.int32),
+        l1=jnp.zeros((n, w), jnp.int32),
+        wvalid=jnp.zeros((n, w), bool),
+        wdirty=jnp.zeros((n, w), bool),
+        fifo=stack(sfifo.make(cfg.fifo_cap)),
+        lr=stack(tables.lr_make(cfg.lr_cap)),
+        pa=stack(tables.pa_make(cfg.pa_cap)),
+        counters=make_counters(n),
+    )
+
+
+# --------------------------------------------------------------------------
+# batched sub-structure helpers
+# --------------------------------------------------------------------------
+
+def _get(tree, cid):
+    return jax.tree.map(lambda x: x[cid], tree)
+
+
+def _set(tree, cid, sub):
+    return jax.tree.map(lambda b, s: b.at[cid].set(s), tree, sub)
+
+
+def _mask_tree(pred, new, old):
+    """Select `new` where pred else `old` (same structure)."""
+    return jax.tree.map(lambda n, o: jnp.where(pred, n, o), new, old)
+
+
+def _blk(cfg: ProtoConfig, addr):
+    return addr // cfg.block_words
+
+
+# --------------------------------------------------------------------------
+# block writeback and FIFO drains  (önbellek-temizleme machinery, §2.2)
+# --------------------------------------------------------------------------
+
+def writeback_block(cfg: ProtoConfig, st: Store, cid, b, guard=True
+                    ) -> Tuple[Store, jnp.ndarray]:
+    """Write back the dirty words of block `b` of cache `cid` to L2.
+
+    Returns (store', did_wb) where did_wb is 1.0 if any word moved.
+    With guard=False or b<0 this is a no-op (used in padded scans).
+    """
+    W = cfg.block_words
+    start = jnp.clip(jnp.asarray(b, jnp.int32), 0) * W
+    guard = jnp.asarray(guard, bool) & (jnp.asarray(b, jnp.int32) >= 0)
+    l1_row = st.l1[cid]
+    dirty_row = st.wdirty[cid]
+    l1_blk = lax.dynamic_slice(l1_row, (start,), (W,))
+    dirty_blk = lax.dynamic_slice(dirty_row, (start,), (W,))
+    sel = dirty_blk & guard
+    l2_blk = lax.dynamic_slice(st.l2, (start,), (W,))
+    l2 = lax.dynamic_update_slice(st.l2, jnp.where(sel, l1_blk, l2_blk), (start,))
+    new_dirty = lax.dynamic_update_slice(dirty_row, dirty_blk & ~sel, (start,))
+    wdirty = st.wdirty.at[cid].set(new_dirty)
+    did = jnp.any(sel).astype(jnp.float32)
+    c = st.counters
+    c = c._replace(l2_accesses=c.l2_accesses + did, wb_blocks=c.wb_blocks + did)
+    return st._replace(l2=l2, wdirty=wdirty, counters=c), did
+
+
+def drain_fifo(cfg: ProtoConfig, st: Store, cid, pos) -> Tuple[Store, jnp.ndarray]:
+    """Selective flush: drain cache `cid`'s sFIFO up to seq `pos` (§4.2 step 3),
+    writing each drained block back to L2.  pos<0 drains nothing;
+    pos=+inf (use drain_fifo_all) drains everything.
+
+    Returns (store', n_blocks_written)."""
+    f = _get(st.fifo, cid)
+    f, drained, _ = sfifo.drain_upto(f, pos)
+    st = st._replace(fifo=_set(st.fifo, cid, f))
+
+    def body(carry, b):
+        s = carry
+        s, did = writeback_block(cfg, s, cid, b)
+        return s, did
+
+    st, dids = lax.scan(body, st, drained)
+    n_wb = jnp.sum(dids)
+    # victim cache busy: handshake + pipelined writebacks
+    p = cfg.params
+    cyc = p.l2_lat + n_wb * p.wb_per_block
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(cyc))
+    return st._replace(counters=c), n_wb
+
+
+def drain_fifo_all(cfg: ProtoConfig, st: Store, cid) -> Tuple[Store, jnp.ndarray]:
+    return drain_fifo(cfg, st, cid, jnp.int32(2**30))
+
+
+def invalidate_cache(cfg: ProtoConfig, st: Store, cid) -> Store:
+    """Whole-cache invalidate: flush dirty first (§2.2), flash-invalidate,
+    clear LR-TBL and PA-TBL (§4.4)."""
+    st, _ = drain_fifo_all(cfg, st, cid)
+    wvalid = st.wvalid.at[cid].set(jnp.zeros((cfg.n_words,), bool))
+    lr = _set(st.lr, cid, tables.lr_clear(_get(st.lr, cid)))
+    pa = _set(st.pa, cid, tables.pa_clear(_get(st.pa, cid)))
+    p = cfg.params
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(p.inv_flash),
+                   inv_full=c.inv_full + 1.0,
+                   inv_per_cache=c.inv_per_cache.at[cid].add(1.0))
+    return st._replace(wvalid=wvalid, lr=lr, pa=pa, counters=c)
+
+
+# --------------------------------------------------------------------------
+# plain loads / stores through the cache
+# --------------------------------------------------------------------------
+
+def load(cfg: ProtoConfig, st: Store, cid, addr) -> Tuple[Store, jnp.ndarray]:
+    """Ordinary read.  L1 hit or fill-from-L2 (read-allocate)."""
+    hit = st.wvalid[cid, addr]
+    val = jnp.where(hit, st.l1[cid, addr], st.l2[addr])
+    l1 = st.l1.at[cid, addr].set(val)
+    wvalid = st.wvalid.at[cid, addr].set(True)
+    p = cfg.params
+    c = st.counters
+    c = c._replace(
+        cycles=c.cycles.at[cid].add(jnp.where(hit, p.l1_lat, p.l1_lat + p.l2_lat)),
+        l1_hits=c.l1_hits + hit.astype(jnp.float32),
+        l1_misses=c.l1_misses + (~hit).astype(jnp.float32),
+        l2_accesses=c.l2_accesses + (~hit).astype(jnp.float32),
+    )
+    return st._replace(l1=l1, wvalid=wvalid, counters=c), val
+
+
+def store_word(cfg: ProtoConfig, st: Store, cid, addr, val, *, force_tail=False,
+               guard=True) -> Tuple[Store, jnp.ndarray]:
+    """Ordinary write (write-combining, no-allocate): update local copy, mark
+    dirty, record the block in the sFIFO.  Capacity eviction writes the
+    oldest block back (§2.2).  Returns (store', fifo_pos_of_block)."""
+    guard = jnp.asarray(guard, bool)
+    addr = jnp.asarray(addr, jnp.int32)
+    l1 = st.l1.at[cid, addr].set(jnp.where(guard, jnp.asarray(val, jnp.int32),
+                                           st.l1[cid, addr]))
+    wvalid = st.wvalid.at[cid, addr].set(st.wvalid[cid, addr] | guard)
+    wdirty = st.wdirty.at[cid, addr].set(st.wdirty[cid, addr] | guard)
+    st = st._replace(l1=l1, wvalid=wvalid, wdirty=wdirty)
+
+    f = _get(st.fifo, cid)
+    f2, evicted, pos = sfifo.push(f, _blk(cfg, addr), force_tail)
+    f = _mask_tree(guard, f2, f)
+    evicted = jnp.where(guard, evicted, INVALID)
+    st = st._replace(fifo=_set(st.fifo, cid, f))
+    st, n_evwb = writeback_block(cfg, st, cid, evicted, guard=evicted >= 0)
+    p = cfg.params
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(
+        jnp.where(guard, p.l1_lat + n_evwb * p.wb_per_block, 0.0)))
+    return st._replace(counters=c), pos
+
+
+# --------------------------------------------------------------------------
+# atomics
+# --------------------------------------------------------------------------
+
+def _atomic_l1(cfg, st: Store, cid, addr, expect, new, is_cas
+               ) -> Tuple[Store, jnp.ndarray]:
+    """Atomic executed at the L1 (local scope). Returns (store', old_value)."""
+    st, cur = load(cfg, st, cid, addr)
+    success = jnp.where(is_cas, cur == expect, True)
+    st, _ = store_word(cfg, st, cid, addr, jnp.where(success, new, cur),
+                       guard=success)
+    return st, cur
+
+
+def _atomic_l2(cfg, st: Store, cid, addr, expect, new, is_cas
+               ) -> Tuple[Store, jnp.ndarray]:
+    """Atomic executed at the L2 (global sync point). Returns (store', old)."""
+    cur = st.l2[addr]
+    success = jnp.where(is_cas, cur == expect, True)
+    l2 = st.l2.at[addr].set(jnp.where(success, new, cur))
+    # local copy of this word is no longer authoritative
+    wvalid = st.wvalid.at[cid, addr].set(False)
+    wdirty = st.wdirty.at[cid, addr].set(False)
+    p = cfg.params
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(p.l2_lat),
+                   l2_accesses=c.l2_accesses + 1.0)
+    return st._replace(l2=l2, wvalid=wvalid, wdirty=wdirty, counters=c), cur
+
+
+# --------------------------------------------------------------------------
+# scoped synchronization — local (work-group) scope, §4.1 / §4.4
+# --------------------------------------------------------------------------
+
+def local_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
+    """atomic_ST_rel_wg: release at local scope.  Pushes the sync block to the
+    sFIFO tail, records (addr -> pos) in the LR-TBL, atomic executes in L1."""
+    st, pos = store_word(cfg, st, cid, addr, val, force_tail=True)
+    lr = _get(st.lr, cid)
+    lr, ev_addr, ev_ptr = tables.lr_insert(lr, addr, pos)
+    st = st._replace(lr=_set(st.lr, cid, lr))
+    # conservative overflow policy: an evicted LR record forces a drain up to
+    # its recorded position so no release is silently lost (DESIGN.md §2)
+    st, _ = drain_fifo(cfg, st, cid, jnp.where(ev_addr >= 0, ev_ptr, INVALID))
+    p = cfg.params
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(p.tbl_lat),
+                   local_syncs=c.local_syncs + 1.0)
+    return st._replace(counters=c)
+
+
+def local_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
+                  ) -> Tuple[Store, jnp.ndarray]:
+    """atomic_CAS_acq_wg: acquire at local scope (§4.4).  If the PA-TBL holds
+    `addr` the acquire is promoted: full invalidate + CAS at L2.  Otherwise a
+    cheap L1 CAS."""
+    promote = tables.pa_contains(_get(st.pa, cid), addr)
+
+    def promoted(s):
+        s = invalidate_cache(cfg, s, cid)          # drains dirty, clears tables
+        s, old = _atomic_l2(cfg, s, cid, addr, expect, new, True)
+        c = s.counters
+        c = c._replace(promotions=c.promotions + 1.0)
+        return s._replace(counters=c), old
+
+    def normal(s):
+        return _atomic_l1(cfg, s, cid, addr, expect, new, True)
+
+    st, old = lax.cond(promote, promoted, normal, st)
+    p = cfg.params
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(p.tbl_lat),
+                   local_syncs=c.local_syncs + 1.0)
+    return st._replace(counters=c), old
+
+
+# --------------------------------------------------------------------------
+# global (device/cmp) scope — the heavyweight ops used by Baseline/Steal-only
+# --------------------------------------------------------------------------
+
+def global_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
+    st, _ = drain_fifo_all(cfg, st, cid)
+    st, _ = _atomic_l2(cfg, st, cid, addr, 0, val, False)
+    c = st.counters
+    return st._replace(counters=c._replace(global_syncs=c.global_syncs + 1.0))
+
+
+def global_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
+                   ) -> Tuple[Store, jnp.ndarray]:
+    st = invalidate_cache(cfg, st, cid)
+    st, old = _atomic_l2(cfg, st, cid, addr, expect, new, True)
+    c = st.counters
+    return st._replace(counters=c._replace(global_syncs=c.global_syncs + 1.0)), old
+
+
+# --------------------------------------------------------------------------
+# remote scope promotion — sRSP (§4.2, §4.3) and original RSP (§3) variants
+# --------------------------------------------------------------------------
+
+def _probe_and_selective_flush(cfg: ProtoConfig, st: Store, cid, addr) -> Store:
+    """Broadcast a selective-flush(addr) probe via L2 to every L1 (§4.2 step 2).
+    Only caches with an LR-TBL entry for addr drain — up to the recorded
+    position — then move addr into their PA-TBL.  Everyone else NACKs."""
+    p = cfg.params
+    n = cfg.n_caches
+
+    def body(carry, j):
+        s, wait = carry
+        lr_j = _get(s.lr, j)
+        ptr = tables.lr_lookup(lr_j, addr)
+        has = (ptr >= 0) & (j != cid)
+        s, n_wb = drain_fifo(cfg, s, j, jnp.where(has, ptr, INVALID))
+        lr_j2 = tables.lr_remove(lr_j, addr)
+        s = s._replace(lr=_set(s.lr, j, _mask_tree(has, lr_j2, _get(s.lr, j))))
+        pa_j = _get(s.pa, j)
+        pa_j2 = tables.pa_insert(pa_j, addr)
+        s = s._replace(pa=_set(s.pa, j, _mask_tree(has, pa_j2, pa_j)))
+        wait = wait + jnp.where(has, p.l2_lat + n_wb * p.wb_per_block, 1.0)
+        return (s, wait), None
+
+    (st, wait), _ = lax.scan(body, (st, jnp.float32(0.0)), jnp.arange(n))
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + p.l2_lat + wait),
+                   probes=c.probes + jnp.float32(n - 1))
+    return st._replace(counters=c)
+
+
+def srsp_remote_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
+                        ) -> Tuple[Store, jnp.ndarray]:
+    """atomic_CAS_rem_acq_cmp under sRSP (§4.2)."""
+    own_ptr = tables.lr_lookup(_get(st.lr, cid), addr)
+
+    def same_cu(s):
+        # §4.2: local sharer on the same CU — both use this L1; no promotion,
+        # just make the releases globally ordered and CAS at L2.
+        s, _ = drain_fifo(cfg, s, cid, own_ptr)
+        lr_c = tables.lr_remove(_get(s.lr, cid), addr)
+        s = s._replace(lr=_set(s.lr, cid, lr_c))
+        return _atomic_l2(cfg, s, cid, addr, expect, new, True)
+
+    def cross_cu(s):
+        s = _probe_and_selective_flush(cfg, s, cid, addr)
+        s = invalidate_cache(cfg, s, cid)          # own global-acquire part
+        return _atomic_l2(cfg, s, cid, addr, expect, new, True)
+
+    st, old = lax.cond(own_ptr >= 0, same_cu, cross_cu, st)
+    c = st.counters
+    return st._replace(counters=c._replace(remote_syncs=c.remote_syncs + 1.0)), old
+
+
+def srsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
+    """atomic_ST_rem_rel_cmp under sRSP (§4.3): flush own cache, ST at L2,
+    broadcast selective-invalidate(addr) -> every PA-TBL records addr."""
+    p = cfg.params
+    st, _ = drain_fifo_all(cfg, st, cid)
+    st, _ = _atomic_l2(cfg, st, cid, addr, 0, val, False)
+
+    def body(s, j):
+        pa_j = tables.pa_insert(_get(s.pa, j), addr)
+        return s._replace(pa=_set(s.pa, j, pa_j)), None
+
+    st, _ = lax.scan(body, st, jnp.arange(cfg.n_caches))
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + cfg.n_caches * 1.0),
+                   probes=c.probes + jnp.float32(cfg.n_caches),
+                   remote_syncs=c.remote_syncs + 1.0)
+    return st._replace(counters=c)
+
+
+def rsp_remote_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
+                       ) -> Tuple[Store, jnp.ndarray]:
+    """Original RSP (§3): promote by flushing EVERY L1 — cost scales with the
+    number of caches.  The caller then invalidates its own L1 and CASes at L2."""
+    p = cfg.params
+
+    def body(carry, j):
+        s, wait = carry
+        s, n_wb = drain_fifo_all(cfg, s, j)
+        wait = wait + p.l2_lat + n_wb * p.wb_per_block  # serialized at L2 port
+        return (s, wait), None
+
+    (st, wait), _ = lax.scan(body, (st, jnp.float32(0.0)), jnp.arange(cfg.n_caches))
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + wait),
+                   probes=c.probes + jnp.float32(cfg.n_caches - 1))
+    st = st._replace(counters=c)
+    st = invalidate_cache(cfg, st, cid)
+    st, old = _atomic_l2(cfg, st, cid, addr, expect, new, True)
+    c = st.counters
+    return st._replace(counters=c._replace(remote_syncs=c.remote_syncs + 1.0)), old
+
+
+def rsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
+    """Original RSP: flush own, ST at L2, then INVALIDATE every L1 (flush-all
+    + flash-invalidate each — the unscalable part)."""
+    p = cfg.params
+    st, _ = drain_fifo_all(cfg, st, cid)
+    st, _ = _atomic_l2(cfg, st, cid, addr, 0, val, False)
+
+    def body(carry, j):
+        s, wait = carry
+        s = invalidate_cache(cfg, s, j)
+        wait = wait + p.l2_lat  # ack per cache through L2
+        return (s, wait), None
+
+    (st, wait), _ = lax.scan(body, (st, jnp.float32(0.0)), jnp.arange(cfg.n_caches))
+    c = st.counters
+    c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + wait),
+                   probes=c.probes + jnp.float32(cfg.n_caches),
+                   remote_syncs=c.remote_syncs + 1.0)
+    return st._replace(counters=c)
+
+
+# --------------------------------------------------------------------------
+# protocol bundles
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Protocol:
+    """The op table a scenario binds against (see worksteal.py)."""
+    name: str
+    owner_acquire: callable   # (cfg, st, cid, addr, expect, new) -> (st, old)
+    owner_release: callable   # (cfg, st, cid, addr, val) -> st
+    thief_acquire: callable
+    thief_release: callable
+
+
+SRSP = Protocol("srsp", local_acquire, local_release,
+                srsp_remote_acquire, srsp_remote_release)
+RSP = Protocol("rsp", local_acquire, local_release,
+               rsp_remote_acquire, rsp_remote_release)
+GLOBAL = Protocol("global", global_acquire, global_release,
+                  global_acquire, global_release)
+LOCAL_ONLY = Protocol("local", local_acquire, local_release,
+                      local_acquire, local_release)  # NOT steal-safe — used to
+                                                     # demonstrate staleness
+
+PROTOCOLS = {p.name: p for p in (SRSP, RSP, GLOBAL, LOCAL_ONLY)}

@@ -1,0 +1,35 @@
+"""Synchronization scopes (OpenCL-style, paper §2.1) and their mapping onto
+the TPU multi-pod mesh used by the framework layer (DESIGN.md §2).
+
+GPU scope            framework scope          mesh realization
+-----------------    ---------------------    -------------------------------
+wi / wv (work-item)  core-local               inside one Pallas program
+wg  ("local")        chip-local               HBM, no collective
+cmp ("global")       pod scope                ICI collectives ('data','model')
+sys                  cross-pod scope          DCI collectives ('pod')
+"""
+from __future__ import annotations
+
+import enum
+
+
+class Scope(enum.IntEnum):
+    WI = 0    # work-item
+    WV = 1    # SIMD-group (wavefront)
+    WG = 2    # work-group  — "local"  (L1 / chip)
+    CMP = 3   # device      — "global" (L2 / pod)
+    SYS = 4   # system      —          (main memory / cross-pod)
+
+
+# Mesh axes a collective at each scope spans, for the framework layer.
+SCOPE_AXES = {
+    Scope.WG: (),                        # chip-local: no collective
+    Scope.CMP: ("data", "model"),        # within-pod ICI
+    Scope.SYS: ("pod", "data", "model"), # cross-pod DCI + ICI
+}
+
+
+def axes_for(scope: Scope, mesh_axis_names: tuple[str, ...]) -> tuple[str, ...]:
+    """Axes (present in the mesh) that a collective at `scope` spans."""
+    want = SCOPE_AXES[scope]
+    return tuple(a for a in want if a in mesh_axis_names)

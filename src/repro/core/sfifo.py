@@ -1,0 +1,112 @@
+"""sFIFO — the QuickRelease-style synchronization FIFO (paper §2.2, [7]).
+
+The hardware sFIFO tracks dirty cache-block addresses in write order; a
+cache flush drains a *prefix* of the FIFO instead of walking the cache.
+sRSP's LR-TBL stores a pointer into this FIFO so a remote acquire drains
+exactly the prefix up to the local sharer's last local release.
+
+Functional JAX model: a *seq-tagged set*.  Each live entry carries the
+monotone push counter value it was (re)pushed with; FIFO order == ascending
+seq.  This makes "move-to-tail" (needed for release atomics, §4.1) and
+"drain up to pointer" O(capacity) vector ops on a small fixed array, with no
+ring-pointer arithmetic.
+
+Write-combining semantics (the baseline cache protocol is no-allocate,
+write-combining — Table 1): a plain write to a block already in the FIFO
+does not create a duplicate entry.  A *release* push forces the entry to the
+tail so that draining up to its position covers every earlier write.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(-1)
+_SEQ_MAX = jnp.int32(2**30)
+
+
+class SFifo(NamedTuple):
+    """Single-cache sFIFO.  Batch over caches by stacking a leading dim."""
+
+    addrs: jnp.ndarray  # [cap] int32 block ids, -1 = free slot
+    seqs: jnp.ndarray   # [cap] int32 push order; meaningful where addrs >= 0
+    next_seq: jnp.ndarray  # [] int32 monotone counter
+
+
+def make(capacity: int) -> SFifo:
+    return SFifo(
+        addrs=jnp.full((capacity,), INVALID, jnp.int32),
+        seqs=jnp.zeros((capacity,), jnp.int32),
+        next_seq=jnp.int32(0),
+    )
+
+
+def size(f: SFifo) -> jnp.ndarray:
+    return jnp.sum(f.addrs >= 0).astype(jnp.int32)
+
+
+def contains(f: SFifo, addr: jnp.ndarray) -> jnp.ndarray:
+    return jnp.any((f.addrs == addr) & (f.addrs >= 0))
+
+
+def push(f: SFifo, addr: jnp.ndarray, force_tail: bool | jnp.ndarray = False
+         ) -> Tuple[SFifo, jnp.ndarray, jnp.ndarray]:
+    """Insert `addr`.
+
+    Returns (fifo', evicted_addr, pos):
+      evicted_addr — block id evicted to make room (-1 if none); the caller
+        must write that block back (capacity-eviction writeback, §2.2).
+      pos — the seq tag of `addr`'s entry; a local release records this in
+        the LR-TBL (§4.1).
+    """
+    addr = jnp.asarray(addr, jnp.int32)
+    force_tail = jnp.asarray(force_tail, bool)
+    valid = f.addrs >= 0
+    hit = (f.addrs == addr) & valid
+    present = jnp.any(hit)
+    hit_idx = jnp.argmax(hit)
+
+    free = ~valid
+    any_free = jnp.any(free)
+    free_idx = jnp.argmax(free)
+    # FIFO eviction victim: smallest seq among live entries.
+    oldest_idx = jnp.argmin(jnp.where(valid, f.seqs, _SEQ_MAX))
+
+    slot = jnp.where(present, hit_idx, jnp.where(any_free, free_idx, oldest_idx))
+    evicted = jnp.where(present | any_free, INVALID, f.addrs[slot])
+
+    # Re-tag when: fresh insert, or present + force_tail (move-to-tail).
+    retag = (~present) | force_tail
+    new_seq_val = jnp.where(retag, f.next_seq, f.seqs[hit_idx])
+    pos = new_seq_val
+
+    addrs = jnp.where(retag, f.addrs.at[slot].set(addr), f.addrs)
+    seqs = jnp.where(retag, f.seqs.at[slot].set(f.next_seq), f.seqs)
+    next_seq = f.next_seq + retag.astype(jnp.int32)
+    return SFifo(addrs, seqs, next_seq), evicted, pos
+
+
+def drain_upto(f: SFifo, pos: jnp.ndarray) -> Tuple[SFifo, jnp.ndarray, jnp.ndarray]:
+    """Remove every entry with seq <= pos (the selective flush, §4.2).
+
+    Returns (fifo', drained_addrs, count).  `drained_addrs` is a fixed
+    [capacity] int32 array in FIFO (seq) order, -1 padded at the end.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    valid = f.addrs >= 0
+    sel = valid & (f.seqs <= pos)
+    count = jnp.sum(sel).astype(jnp.int32)
+    # Sort selected entries by seq; unselected sink to the back.
+    key = jnp.where(sel, f.seqs, _SEQ_MAX)
+    order = jnp.argsort(key)
+    drained = jnp.where(jnp.arange(f.addrs.shape[0]) < count,
+                        f.addrs[order], INVALID)
+    addrs = jnp.where(sel, INVALID, f.addrs)
+    return SFifo(addrs, f.seqs, f.next_seq), drained, count
+
+
+def drain_all(f: SFifo) -> Tuple[SFifo, jnp.ndarray, jnp.ndarray]:
+    """Full flush (cache-wide önbellek-temizleme) through the sFIFO."""
+    return drain_upto(f, _SEQ_MAX)

@@ -1,0 +1,123 @@
+"""LR-TBL and PA-TBL — the two new hardware structures sRSP adds (paper §4).
+
+LR-TBL (Local-Release Table): small CAM mapping
+    sync-variable block address -> sFIFO position of the last local release.
+A selective-flush probe consults it; only the cache holding an entry for the
+probed address drains its sFIFO up to the recorded position.
+
+PA-TBL (Promoted-Acquire Table): set of addresses whose *next* local-scope
+acquire must be promoted to global scope (paper §4.3/4.4).
+
+Overflow policies (the paper sizes the tables small and does not specify
+overflow; we pick *conservative* policies that preserve the memory model —
+documented in DESIGN.md §2):
+  * LR-TBL eviction returns the evicted (addr, ptr) so the protocol can
+    conservatively drain up to that position (no release record may be
+    silently dropped).
+  * PA-TBL overflow sets a sticky `promote_all` bit: every local acquire
+    promotes until the next full invalidation clears the tables.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(-1)
+_SEQ_MAX = jnp.int32(2**30)
+
+
+class LRTbl(NamedTuple):
+    addrs: jnp.ndarray  # [cap] int32, -1 free
+    ptrs: jnp.ndarray   # [cap] int32 sFIFO seq positions
+    ages: jnp.ndarray   # [cap] int32 insertion order (for FIFO eviction)
+    next_age: jnp.ndarray  # [] int32
+
+
+def lr_make(capacity: int) -> LRTbl:
+    return LRTbl(
+        addrs=jnp.full((capacity,), INVALID, jnp.int32),
+        ptrs=jnp.zeros((capacity,), jnp.int32),
+        ages=jnp.zeros((capacity,), jnp.int32),
+        next_age=jnp.int32(0),
+    )
+
+
+def lr_insert(t: LRTbl, addr: jnp.ndarray, ptr: jnp.ndarray
+              ) -> Tuple[LRTbl, jnp.ndarray, jnp.ndarray]:
+    """Insert or update addr -> ptr.  Returns (tbl', evicted_addr, evicted_ptr)."""
+    addr = jnp.asarray(addr, jnp.int32)
+    valid = t.addrs >= 0
+    hit = (t.addrs == addr) & valid
+    present = jnp.any(hit)
+    hit_idx = jnp.argmax(hit)
+    free = ~valid
+    any_free = jnp.any(free)
+    free_idx = jnp.argmax(free)
+    oldest_idx = jnp.argmin(jnp.where(valid, t.ages, _SEQ_MAX))
+    slot = jnp.where(present, hit_idx, jnp.where(any_free, free_idx, oldest_idx))
+    evict = (~present) & (~any_free)
+    evicted_addr = jnp.where(evict, t.addrs[slot], INVALID)
+    evicted_ptr = jnp.where(evict, t.ptrs[slot], INVALID)
+    return (
+        LRTbl(
+            addrs=t.addrs.at[slot].set(addr),
+            ptrs=t.ptrs.at[slot].set(jnp.asarray(ptr, jnp.int32)),
+            ages=t.ages.at[slot].set(t.next_age),
+            next_age=t.next_age + 1,
+        ),
+        evicted_addr,
+        evicted_ptr,
+    )
+
+
+def lr_lookup(t: LRTbl, addr: jnp.ndarray) -> jnp.ndarray:
+    """Return recorded sFIFO position for addr, or -1."""
+    hit = (t.addrs == addr) & (t.addrs >= 0)
+    return jnp.where(jnp.any(hit), t.ptrs[jnp.argmax(hit)], INVALID)
+
+
+def lr_remove(t: LRTbl, addr: jnp.ndarray) -> LRTbl:
+    hit = (t.addrs == addr) & (t.addrs >= 0)
+    return t._replace(addrs=jnp.where(hit, INVALID, t.addrs))
+
+
+def lr_clear(t: LRTbl) -> LRTbl:
+    return t._replace(addrs=jnp.full_like(t.addrs, INVALID))
+
+
+class PATbl(NamedTuple):
+    addrs: jnp.ndarray        # [cap] int32, -1 free
+    promote_all: jnp.ndarray  # [] bool — sticky overflow bit
+
+
+def pa_make(capacity: int) -> PATbl:
+    return PATbl(
+        addrs=jnp.full((capacity,), INVALID, jnp.int32),
+        promote_all=jnp.asarray(False),
+    )
+
+
+def pa_insert(t: PATbl, addr: jnp.ndarray) -> PATbl:
+    addr = jnp.asarray(addr, jnp.int32)
+    valid = t.addrs >= 0
+    present = jnp.any((t.addrs == addr) & valid)
+    free = ~valid
+    any_free = jnp.any(free)
+    free_idx = jnp.argmax(free)
+    do_insert = (~present) & any_free
+    overflow = (~present) & (~any_free)
+    addrs = jnp.where(do_insert, t.addrs.at[free_idx].set(addr), t.addrs)
+    return PATbl(addrs=addrs, promote_all=t.promote_all | overflow)
+
+
+def pa_contains(t: PATbl, addr: jnp.ndarray) -> jnp.ndarray:
+    """True if the next local acquire of addr must be promoted."""
+    hit = jnp.any((t.addrs == addr) & (t.addrs >= 0))
+    return hit | t.promote_all
+
+
+def pa_clear(t: PATbl) -> PATbl:
+    return PATbl(addrs=jnp.full_like(t.addrs, INVALID),
+                 promote_all=jnp.asarray(False))

@@ -1,0 +1,503 @@
+"""Work-stealing load balancing over the scoped-synchronization protocols.
+
+This is the paper's evaluation harness (§5.1): a lock-free-style
+work-stealing runtime (Cederman & Tsigas [10]) where each work-group owns a
+task queue; owners dequeue from the tail with *local-scope* synchronization
+and thieves steal from the head with *remote-scope* (or global-scope)
+synchronization.  Queue words — lock, head, tail, task entries — live inside
+the protocol's simulated memory, so a protocol bug produces stale task ids /
+lost or duplicated chunks, which the harness detects (``proc_errors``).
+
+Five scenarios (paper §5.1):
+    baseline     no stealing, global-scope sync on every queue op
+    scope_only   no stealing, local-scope sync (cheap but imbalanced)
+    steal_only   stealing with global-scope sync everywhere
+    rsp          local sync for owners; original flush-all/inv-all RSP
+                 promotion for steals
+    srsp         local sync for owners; this paper's selective promotion
+
+Tasks are chunks of graph nodes; per-chunk work cycles follow the cost
+model (task_base + per_edge * chunk_edges) and chunk outputs are written
+through the simulated memory so flush traffic is real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import protocol as P
+from repro.core import costmodel, sfifo
+from repro.data.graphs import CSRGraph
+
+QMETA = 16  # words reserved at the head of each queue (lock/head/tail block)
+
+
+@dataclasses.dataclass(frozen=True)
+class WSConfig:
+    n_wgs: int = 64
+    chunk_cap: int = 32          # nodes per task chunk
+    n_chunks_max: int = 512      # static bound on chunks per iteration
+    fifo_cap: int = 16
+    lr_cap: int = 8
+    pa_cap: int = 8
+    cold_factor: float = 1.0     # refill penalty scale after an invalidation
+    params: costmodel.CostParams = dataclasses.field(default_factory=costmodel.CostParams)
+
+    @property
+    def qcap(self) -> int:
+        return self.n_chunks_max  # worst-case skew bound
+
+    @property
+    def qstride(self) -> int:
+        s = QMETA + self.qcap
+        return (s + 15) // 16 * 16
+
+    @property
+    def data_base(self) -> int:
+        return self.n_wgs * self.qstride
+
+    @property
+    def n_words(self) -> int:
+        w = self.data_base + self.n_chunks_max * self.chunk_cap
+        return (w + 15) // 16 * 16
+
+    def proto_cfg(self) -> P.ProtoConfig:
+        return P.ProtoConfig(n_caches=self.n_wgs, n_words=self.n_words,
+                             fifo_cap=self.fifo_cap, lr_cap=self.lr_cap,
+                             pa_cap=self.pa_cap, params=self.params)
+
+
+SCENARIOS = {
+    #  name        -> (protocol, steal?)
+    "baseline":   ("global", False),
+    "scope_only": ("local", False),
+    "steal_only": ("global", True),
+    "rsp":        ("rsp", True),
+    "srsp":       ("srsp", True),
+}
+
+
+class SimState(NamedTuple):
+    store: P.Store
+    qsize: jnp.ndarray      # [n_wgs] i32 bookkeeping occupancy
+    processed: jnp.ndarray  # [n_chunks_max] i32 — from values read THROUGH the store
+    last_inv: jnp.ndarray   # [n_wgs] f32 inv_per_cache snapshot at last processed chunk
+    rounds: jnp.ndarray     # [] i32
+
+
+class WorkStealSim:
+    """Jit-compiled round-based simulator for one scenario.
+
+    The compiled functions depend only on (WSConfig, scenario), so they are
+    reused across apps and graphs of the same shape."""
+
+    def __init__(self, ws: WSConfig, scenario: str):
+        if scenario not in SCENARIOS:
+            raise ValueError(f"unknown scenario {scenario!r}")
+        self.ws = ws
+        self.scenario = scenario
+        proto_name, steal = SCENARIOS[scenario]
+        self.proto = P.PROTOCOLS[proto_name]
+        self.steal = steal
+        self.cfg = ws.proto_cfg()
+        self._enqueue = jax.jit(self._enqueue_impl)
+        self._run_rounds = jax.jit(self._run_rounds_impl)
+
+    # ---------------- memory map ----------------
+    def lock_addr(self, q):
+        return q * self.ws.qstride
+
+    def head_addr(self, q):
+        return q * self.ws.qstride + 1
+
+    def tail_addr(self, q):
+        return q * self.ws.qstride + 2
+
+    def task_addr(self, q, slot):
+        return q * self.ws.qstride + QMETA + slot
+
+    def make_store(self) -> P.Store:
+        return P.make_store(self.cfg)
+
+    # ---------------- enqueue (batch, one critical section per owner) -------
+    def _enqueue_impl(self, store: P.Store, enq_owner, enq_slot, enq_valid,
+                      n_enq):
+        ws, cfg, proto = self.ws, self.cfg, self.proto
+        n_chunks = ws.n_chunks_max
+        chunk_ids = jnp.arange(n_chunks, dtype=jnp.int32)
+        max_blk = ws.qcap // 16 + 2
+
+        def enq_wg(store, wg):
+            k = n_enq[wg]
+            # acquire FIRST: a promoted acquire invalidates this cache, so
+            # the task-word writes must land inside the critical section
+            # (writing before the acquire broke the dirty⊆sFIFO invariant
+            # and produced stale task reads — see tests/test_worksteal.py)
+            st, _ = proto.owner_acquire(cfg, store, wg, self.lock_addr(wg), 0, 1)
+            # scatter THIS wg's task words (write-combining bulk store)
+            mine = enq_valid & (enq_owner == wg)
+            addr = jnp.where(mine, wg * ws.qstride + QMETA + enq_slot,
+                             jnp.int32(cfg.n_words))  # out of range -> drop
+            st = st._replace(
+                l1=st.l1.at[wg, addr].set(chunk_ids + 1, mode="drop"),
+                wvalid=st.wvalid.at[wg, addr].set(True, mode="drop"),
+                wdirty=st.wdirty.at[wg, addr].set(True, mode="drop"))
+            # record the task-word blocks in the sFIFO (write-combining path)
+            first_blk = (wg * ws.qstride + QMETA) // cfg.block_words
+
+            def touch(st, i):
+                guard = (i * cfg.block_words) < k
+                f = P._get(st.fifo, wg)
+                f2, evicted, _ = sfifo.push(f, first_blk + i, False)
+                f = P._mask_tree(guard, f2, f)
+                evicted = jnp.where(guard, evicted, jnp.int32(-1))
+                st = st._replace(fifo=P._set(st.fifo, wg, f))
+                st, _ = P.writeback_block(cfg, st, wg, evicted, guard=evicted >= 0)
+                return st, None
+
+            st, _ = lax.scan(touch, st, jnp.arange(max_blk, dtype=jnp.int32))
+            st, _ = P.store_word(cfg, st, wg, self.head_addr(wg), 0)
+            st, _ = P.store_word(cfg, st, wg, self.tail_addr(wg), k)
+            st = proto.owner_release(cfg, st, wg, self.lock_addr(wg), 0)
+            c = st.counters
+            c = c._replace(cycles=c.cycles.at[wg].add(
+                k.astype(jnp.float32) * cfg.params.l1_lat))
+            return st._replace(counters=c), None
+
+        store, _ = lax.scan(enq_wg, store, jnp.arange(ws.n_wgs, dtype=jnp.int32))
+        return store
+
+    # ---------------- round loop ----------------
+    def _wg_turn(self, state: SimState, wg, chunk_count, chunk_edges):
+        ws, cfg, proto = self.ws, self.cfg, self.proto
+        p = cfg.params
+        qsz = state.qsize[wg]
+        can_pop = qsz > 0
+        sizes_others = state.qsize.at[wg].set(0)
+        victim = jnp.argmax(sizes_others).astype(jnp.int32)
+        can_steal = jnp.asarray(self.steal) & (sizes_others[victim] > 0)
+        branch = jnp.where(can_pop, 0, jnp.where(can_steal, 1, 2))
+
+        def do_pop(st):
+            lock = self.lock_addr(wg)
+            st, _ = proto.owner_acquire(cfg, st, wg, lock, 0, 1)
+            st, tail = P.load(cfg, st, wg, self.tail_addr(wg))
+            st, head = P.load(cfg, st, wg, self.head_addr(wg))
+            has = head < tail
+            slot = jnp.clip(tail - 1, 0, ws.qcap - 1)
+            st, task = P.load(cfg, st, wg, self.task_addr(wg, slot))
+            st, _ = P.store_word(cfg, st, wg, self.tail_addr(wg), tail - 1,
+                                 guard=has)
+            st = proto.owner_release(cfg, st, wg, lock, 0)
+            return st, jnp.where(has, task - 1, -1), wg
+
+        def do_steal(st):
+            lock = self.lock_addr(victim)
+            st, _ = proto.thief_acquire(cfg, st, wg, lock, 0, 1)
+            st, head = P.load(cfg, st, wg, self.head_addr(victim))
+            st, tail = P.load(cfg, st, wg, self.tail_addr(victim))
+            has = head < tail
+            slot = jnp.clip(head, 0, ws.qcap - 1)
+            st, task = P.load(cfg, st, wg, self.task_addr(victim, slot))
+            st, _ = P.store_word(cfg, st, wg, self.head_addr(victim), head + 1,
+                                 guard=has)
+            st = proto.thief_release(cfg, st, wg, lock, 0)
+            c = st.counters
+            st = st._replace(counters=c._replace(
+                steals=c.steals + has.astype(jnp.float32)))
+            return st, jnp.where(has, task - 1, -1), victim
+
+        def do_idle(st):
+            return st, jnp.int32(-1), wg
+
+        store, chunk, dec_q = lax.switch(branch, [do_pop, do_steal, do_idle],
+                                         state.store)
+        attempted = branch < 2
+        qsize = state.qsize.at[dec_q].add(jnp.where(attempted, -1, 0))
+        qsize = jnp.maximum(qsize, 0)
+
+        # ------- process the chunk -------
+        valid = (chunk >= 0) & (chunk < ws.n_chunks_max)
+        safe = jnp.clip(chunk, 0, ws.n_chunks_max - 1)
+        processed = state.processed.at[safe].add(valid.astype(jnp.int32))
+        count = jnp.where(valid, chunk_count[safe], 0)
+        edges = jnp.where(valid, chunk_edges[safe], 0.0)
+        work = p.task_base + p.per_edge * edges
+        # cold-cache refill penalty if this wg's L1 was invalidated since its
+        # last chunk (models the post-invalidate miss storm, DESIGN.md §2)
+        inv_now = store.counters.inv_per_cache[wg]
+        was_cold = inv_now > state.last_inv[wg]
+        touched_lines = count.astype(jnp.float32) + edges / 4.0
+        work = work + jnp.where(was_cold, self.ws.cold_factor * touched_lines
+                                * (p.l2_lat / 4.0), 0.0)
+        c = store.counters
+        c = c._replace(cycles=c.cycles.at[wg].add(jnp.where(valid, work, 0.0)))
+        store = store._replace(counters=c)
+        last_inv = state.last_inv.at[wg].set(
+            jnp.where(valid, inv_now, state.last_inv[wg]))
+
+        # chunk output writes go through the memory system (flushable dirt)
+        dblk = ws.chunk_cap // 16 + 1
+
+        def wr(st, kk):
+            a = ws.data_base + safe * ws.chunk_cap + kk * 16
+            g = valid & ((kk * 16) < count)
+            st, _ = P.store_word(cfg, st, wg, jnp.clip(a, 0, cfg.n_words - 1),
+                                 chunk, guard=g)
+            return st, None
+
+        store, _ = lax.scan(wr, store, jnp.arange(dblk, dtype=jnp.int32))
+        return SimState(store, qsize, processed, last_inv, state.rounds), None
+
+    def _run_rounds_impl(self, state: SimState, chunk_count, chunk_edges):
+        """Event-driven execution: the work-group with the smallest cycle
+        clock acts next (pop own queue, or steal if its queue is empty).
+        This is what makes load imbalance — and therefore stealing — real:
+        a wg chewing a heavy chunk has a high clock and yields the floor."""
+        ws = self.ws
+        max_events = 2 * ws.n_chunks_max + 4 * ws.n_wgs
+        big = jnp.float32(3e38)
+
+        def cond(s: SimState):
+            return (jnp.sum(s.qsize) > 0) & (s.rounds < max_events)
+
+        def body(s: SimState):
+            any_work = jnp.sum(s.qsize) > 0
+            can_pop = s.qsize > 0
+            can_steal = jnp.asarray(self.steal) & (s.qsize == 0) & any_work
+            cand = can_pop | can_steal
+            clocks = jnp.where(cand, s.store.counters.cycles, big)
+            wg = jnp.argmin(clocks).astype(jnp.int32)
+            s, _ = self._wg_turn(s, wg, chunk_count, chunk_edges)
+            return s._replace(rounds=s.rounds + 1)
+
+        return lax.while_loop(cond, body, state)
+
+    # ---------------- per-iteration driver ----------------
+    def run_iteration(self, store: P.Store, frontier_nodes: np.ndarray,
+                      degrees: np.ndarray, last_inv: jnp.ndarray):
+        """Distribute `frontier_nodes` as chunks, enqueue, run rounds.
+
+        Returns (store', last_inv', proc_errors, n_chunks)."""
+        ws = self.ws
+        n = len(degrees)
+        nf = len(frontier_nodes)
+        n_chunks = min((nf + ws.chunk_cap - 1) // ws.chunk_cap, ws.n_chunks_max)
+        owner = np.zeros(ws.n_chunks_max, np.int32)
+        count = np.zeros(ws.n_chunks_max, np.int32)
+        edges = np.zeros(ws.n_chunks_max, np.float32)
+        valid = np.zeros(ws.n_chunks_max, bool)
+        for c in range(n_chunks):
+            sel = frontier_nodes[c * ws.chunk_cap:(c + 1) * ws.chunk_cap]
+            owner[c] = int(sel[0]) * ws.n_wgs // n  # ownership by node range
+            count[c] = len(sel)
+            edges[c] = float(degrees[sel].sum())
+            valid[c] = True
+        # slot index within owner's queue
+        slot = np.zeros(ws.n_chunks_max, np.int32)
+        n_enq = np.zeros(ws.n_wgs, np.int32)
+        for c in range(n_chunks):
+            slot[c] = n_enq[owner[c]]
+            n_enq[owner[c]] += 1
+
+        store = self._enqueue(store, jnp.asarray(owner), jnp.asarray(slot),
+                              jnp.asarray(valid), jnp.asarray(n_enq))
+        state = SimState(store=store, qsize=jnp.asarray(n_enq),
+                         processed=jnp.zeros(ws.n_chunks_max, jnp.int32),
+                         last_inv=last_inv, rounds=jnp.int32(0))
+        state = self._run_rounds(state, jnp.asarray(count),
+                                 jnp.asarray(edges.astype(np.float32)))
+        proc = np.asarray(state.processed)
+        errors = int(np.abs(proc[valid] - 1).sum() + proc[~valid].sum())
+        return state.store, state.last_inv, errors, n_chunks
+
+
+# --------------------------------------------------------------------------
+# applications (paper §5.1: PageRank, SSSP; MIS also mentioned)
+# --------------------------------------------------------------------------
+
+class AppResult(NamedTuple):
+    name: str
+    scenario: str
+    makespan: float
+    counters: dict
+    proc_errors: int
+    iterations: int
+    wall_s: float
+    solution: np.ndarray
+
+
+def _edge_arrays(g: CSRGraph):
+    rows = np.repeat(np.arange(g.n, dtype=np.int32), g.degrees)
+    return rows, g.indices, g.weights
+
+
+def run_app(app: str, g: CSRGraph, scenario: str, ws: WSConfig,
+            max_iters: int = 8, seed: int = 0) -> AppResult:
+    sim = WorkStealSim(ws, scenario)
+    store = sim.make_store()
+    last_inv = jnp.zeros((ws.n_wgs,), jnp.float32)
+    rows, cols, w = _edge_arrays(g)
+    rows_j, cols_j, w_j = jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(w)
+    deg = jnp.asarray(np.maximum(g.degrees, 1))
+    n = g.n
+    t0 = time.perf_counter()
+    errors = 0
+    iters = 0
+
+    if app == "pagerank":
+        ranks = jnp.full((n,), 1.0 / n, jnp.float32)
+
+        @jax.jit
+        def bulk(r):
+            contrib = r[cols_j] / deg[cols_j]
+            s = jnp.zeros((n,), jnp.float32).at[rows_j].add(contrib)
+            return 0.15 / n + 0.85 * s
+
+        frontier = np.arange(n, dtype=np.int32)
+        for it in range(max_iters):
+            store, last_inv, e, _ = sim.run_iteration(store, frontier,
+                                                      g.degrees, last_inv)
+            errors += e
+            ranks = bulk(ranks)
+            iters += 1
+        solution = np.asarray(ranks)
+
+    elif app == "sssp":
+        INF = np.int32(2**30)
+        dist = jnp.full((n,), INF, jnp.int32).at[0].set(0)
+
+        @jax.jit
+        def bulk(d, fmask):
+            cand = d[rows_j] + w_j
+            cand = jnp.where(fmask[rows_j], cand, INF)
+            nd = d.at[cols_j].min(cand)
+            return nd, nd < d
+
+        frontier_mask = np.zeros(n, bool)
+        frontier_mask[0] = True
+        dist_j = dist
+        for it in range(max_iters):
+            fnodes = np.nonzero(frontier_mask)[0].astype(np.int32)
+            if len(fnodes) == 0:
+                break
+            store, last_inv, e, _ = sim.run_iteration(store, fnodes,
+                                                      g.degrees, last_inv)
+            errors += e
+            dist_j, improved = bulk(dist_j, jnp.asarray(frontier_mask))
+            frontier_mask = np.asarray(improved)
+            iters += 1
+        solution = np.asarray(dist_j)
+
+    elif app == "mis":
+        # Luby's algorithm: 0 undecided / 1 in MIS / 2 excluded
+        status = jnp.zeros((n,), jnp.int32)
+        key = jax.random.PRNGKey(seed)
+
+        @jax.jit
+        def bulk(st, k):
+            und = st == 0
+            prio = jax.random.uniform(k, (n,)) + jnp.where(und, 0.0, -10.0)
+            nb_max = jnp.full((n,), -20.0).at[rows_j].max(
+                jnp.where(und[cols_j], prio[cols_j], -20.0))
+            join = und & (prio > nb_max)
+            st = jnp.where(join, 1, st)
+            excl = jnp.zeros((n,), bool).at[rows_j].max(join[cols_j])
+            st = jnp.where((st == 0) & excl, 2, st)
+            return st
+
+        for it in range(max_iters * 3):
+            und_nodes = np.nonzero(np.asarray(status) == 0)[0].astype(np.int32)
+            if len(und_nodes) == 0:
+                break
+            store, last_inv, e, _ = sim.run_iteration(store, und_nodes,
+                                                      g.degrees, last_inv)
+            errors += e
+            key, sub = jax.random.split(key)
+            status = bulk(status, sub)
+            iters += 1
+        solution = np.asarray(status)
+    else:
+        raise ValueError(f"unknown app {app!r}")
+
+    wall = time.perf_counter() - t0
+    c = store.counters
+    counters = {
+        "makespan": float(costmodel.makespan(c)),
+        "l2_accesses": float(c.l2_accesses),
+        "wb_blocks": float(c.wb_blocks),
+        "inv_full": float(c.inv_full),
+        "probes": float(c.probes),
+        "promotions": float(c.promotions),
+        "local_syncs": float(c.local_syncs),
+        "remote_syncs": float(c.remote_syncs),
+        "global_syncs": float(c.global_syncs),
+        "steals": float(c.steals),
+        "l1_hits": float(c.l1_hits),
+        "l1_misses": float(c.l1_misses),
+    }
+    return AppResult(app, scenario, counters["makespan"], counters, errors,
+                     iters, wall, solution)
+
+
+def reference_solution(app: str, g: CSRGraph, max_iters: int = 8,
+                       seed: int = 0) -> np.ndarray:
+    """Single-threaded oracle — identical bulk math, no scheduler/protocol."""
+    ws = WSConfig(n_wgs=1, n_chunks_max=1)
+    del ws
+    rows, cols, w = _edge_arrays(g)
+    n = g.n
+    deg = np.maximum(g.degrees, 1)
+    if app == "pagerank":
+        r = np.full(n, 1.0 / n, np.float32)
+        for _ in range(max_iters):
+            s = np.zeros(n, np.float32)
+            np.add.at(s, rows, r[cols] / deg[cols])
+            r = (0.15 / n + 0.85 * s).astype(np.float32)
+        return r
+    if app == "sssp":
+        INF = np.int64(2**30)
+        d = np.full(n, INF, np.int64)
+        d[0] = 0
+        fmask = np.zeros(n, bool)
+        fmask[0] = True
+        for _ in range(max_iters):
+            if not fmask.any():
+                break
+            cand = np.where(fmask[rows], d[rows] + w, INF)
+            nd = d.copy()
+            np.minimum.at(nd, cols, cand)
+            fmask = nd < d
+            d = nd
+        return d.astype(np.int32)
+    if app == "mis":
+        # same PRNG sequence as run_app's bulk
+        status = jnp.zeros((n,), jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        rows_j, cols_j = jnp.asarray(rows), jnp.asarray(cols)
+
+        @jax.jit
+        def bulk(st, k):
+            und = st == 0
+            prio = jax.random.uniform(k, (n,)) + jnp.where(und, 0.0, -10.0)
+            nb_max = jnp.full((n,), -20.0).at[rows_j].max(
+                jnp.where(und[cols_j], prio[cols_j], -20.0))
+            join = und & (prio > nb_max)
+            st = jnp.where(join, 1, st)
+            excl = jnp.zeros((n,), bool).at[rows_j].max(join[cols_j])
+            st = jnp.where((st == 0) & excl, 2, st)
+            return st
+
+        for _ in range(max_iters * 3):
+            if not (np.asarray(status) == 0).any():
+                break
+            key, sub = jax.random.split(key)
+            status = bulk(status, sub)
+        return np.asarray(status)
+    raise ValueError(app)

@@ -1,0 +1,51 @@
+"""Gradient/delta compression for cross-pod (DCI) traffic: per-block int8
+quantization with error feedback.
+
+Used by the sRSP-style selective cross-pod sync (hier_sync.py): the flushed
+dirty-block payload is quantized before the 'pod'-axis collective, and the
+quantization error is fed back into the next delta (standard EF-SGD), so
+the compression is unbiased over time."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    err: jnp.ndarray  # [n_blocks, block_size] f32 residual
+
+
+def ef_init(n_blocks: int, block_size: int) -> EFState:
+    return EFState(err=jnp.zeros((n_blocks, block_size), jnp.float32))
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric int8.  x [n, d] -> (q int8 [n, d], scale f32 [n])."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+def compress_blocks(delta: jnp.ndarray, ef: EFState, idx: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, EFState]:
+    """delta [n_blocks, bs]; idx [max_dirty] block ids (-1 pad).
+    Returns (q [max_dirty, bs] int8, scales [max_dirty], ef')."""
+    safe = jnp.clip(idx, 0, delta.shape[0] - 1)
+    valid = (idx >= 0)[:, None]
+    payload = (delta[safe] + ef.err[safe]) * valid
+    q, scale = quantize_int8(payload)
+    recon = dequantize_int8(q, scale)
+    new_err = ef.err.at[safe].set(jnp.where(valid, payload - recon,
+                                            ef.err[safe]))
+    return q, scale, EFState(err=new_err)
+
+
+def compressed_bytes(max_dirty: int, block_size: int) -> int:
+    return max_dirty * block_size * 1 + max_dirty * 4  # int8 payload + scales

@@ -1,0 +1,21 @@
+"""Shared kernel utilities.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling).  On this CPU
+container they are validated with interpret=True, which executes the kernel
+body in Python; `default_interpret()` picks the right mode automatically.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

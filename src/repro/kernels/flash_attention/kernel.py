@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+TPU adaptation notes (DESIGN.md §2): the FlashAttention recurrence is
+re-tiled for the MXU and VMEM instead of warps/shared memory —
+(block_q x d) @ (d x block_k) contractions with d and block sizes padded to
+multiples of 128/8 so the systolic array is fully fed.  The online-softmax
+running state (m, l, acc) lives in VMEM scratch and is carried across the
+innermost (kv) grid dimension, which Pallas TPU executes sequentially per
+(batch, head, q-block) — exactly the semantics flash needs.
+
+Causal skipping: fully-masked kv blocks are skipped with pl.when on the
+block index (their DMAs still issue; acceptable at validation scale and a
+known further optimization on real hardware — see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, block_q: int, block_k: int):
+    i = pl.program_id(2)           # q block
+    j = pl.program_id(3)           # kv block
+    n_k = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # with causal masking, kv blocks strictly above the diagonal contribute 0
+    needed = (jnp.asarray(True) if not causal
+              else (j * block_k <= i * block_q + block_q - 1))
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)               # [bk, d]
+        s = q @ k.T                                       # [bq, bk]
+        if causal:
+            rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]                               # [bq, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False):
+    """q [B, Hq, Sq, D]; k, v [B, Hkv, Sk, D] -> [B, Hq, Sq, D]."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+
+    grid = (b, hq, sq // block_q, sk // block_k)
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, h, i, j: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, i, j, g=group: (bb, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, i, j, g=group: (bb, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, h, i, j: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for flash attention with backend dispatch.
+
+Training uses the differentiable blockwise-jnp attention in
+repro/models/layers.py; this kernel is the serving / TPU fast path and the
+oracle-validated Pallas artifact."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention import ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    use_pallas: bool = True,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    if interpret is None:
+        interpret = default_interpret()
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: flash-decode — single-token attention over a long,
+possibly partially-filled KV cache.
+
+Decode attention is purely HBM-bandwidth-bound (every step streams the whole
+KV cache once, q is one token).  The kernel tiles the cache into
+(block_k, d) VMEM chunks on the innermost grid axis and carries the
+online-softmax state in VMEM scratch; per-(batch, head) the chunk loop is
+sequential so the running (m, l, acc) recurrence is exact.
+
+The `kv_len` scalar is prefetched so chunks entirely past the valid prefix
+are skipped (pl.when) — with a ring-buffer cache this is what keeps
+long_500k decode from paying for unwritten cache tail.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_k = pl.num_programs(2)
+    kv_len = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * block_k < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [1, d] row
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)               # [bk, d]
+        s = (k @ q.T).T                                   # [1, bk]
+        pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                            # [1, bk]
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v       # [1, d]
+        m_scr[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def flash_decode_pallas(q, k, v, kv_len, *, scale: float | None = None,
+                        block_k: int = 512, interpret: bool = False):
+    """q [B, Hq, D]; k, v [B, Hkv, S, D]; kv_len [B] -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+
+    q4 = q[:, :, None, :]  # [B, Hq, 1, D]
+    grid = (b, hq, s // block_k)
+    kern = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bb, h, j, L: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, j, L, g=group: (bb, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, j, L, g=group: (bb, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bb, h, j, L: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32), q4, k, v)
+    return out[:, :, 0, :]

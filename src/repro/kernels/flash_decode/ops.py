@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for flash-decode with backend dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+from repro.kernels.flash_decode import ref
+
+
+def flash_decode(q, k, v, kv_len, *, scale: float | None = None,
+                 block_k: int = 512, use_pallas: bool = True,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, kv_len, scale=scale)
+    if interpret is None:
+        interpret = default_interpret()
+    return flash_decode_pallas(q, k, v, kv_len, scale=scale,
+                               block_k=block_k, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len, *, scale: float | None = None):
+    """q [B, Hq, D]; k, v [B, Hkv, S, D]; kv_len [B] int32 (valid prefix).
+    Returns [B, Hq, D]."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    logits = jnp.einsum("bhd,bhsd->bhs", qf, kf)
+    pos = jnp.arange(s)[None, None, :]
+    logits = jnp.where(pos < kv_len[:, None, None], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", p, vf).astype(q.dtype)

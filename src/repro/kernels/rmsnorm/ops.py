@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for RMSNorm with backend dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm import ref
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+            *, use_pallas: bool = False, interpret: bool | None = None
+            ) -> jnp.ndarray:
+    """RMSNorm. use_pallas=True selects the fused TPU kernel (interpret mode
+    on CPU); the default jnp path is used inside differentiable model code."""
+    if not use_pallas:
+        return ref.rmsnorm_ref(x, w, eps)
+    if interpret is None:
+        interpret = default_interpret()
+    return rmsnorm_pallas(x, w, eps=eps, interpret=interpret)

@@ -1,0 +1,1 @@
+from repro.kernels.selective_flush.ops import selective_flush, selective_apply  # noqa: F401

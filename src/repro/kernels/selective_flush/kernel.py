@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: selective flush = gather-compact of dirty blocks.
+
+This is the TPU-native realization of the paper's selective-flush (§4.2):
+instead of a GPU L1 walking its sFIFO and writing blocks back one by one,
+the TPU owner gathers exactly the dirty parameter/state blocks named by the
+sFIFO into a contiguous staging buffer — which then feeds one small
+collective (the "writeback to global scope").
+
+TPU-idiomatic pattern: the dirty-block index list is *scalar-prefetched*
+(PrefetchScalarGridSpec) so the BlockSpec index_map can select a dynamic HBM
+block per grid step — dynamic gather without scatter/gather instructions,
+driven entirely by the DMA engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flush_kernel(idx_ref, bank_ref, out_ref):
+    i = pl.program_id(0)
+    valid = idx_ref[i] >= 0
+
+    @pl.when(valid)
+    def _copy():
+        out_ref[...] = bank_ref[...]
+
+    @pl.when(jnp.logical_not(valid))
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def selective_flush_pallas(bank: jnp.ndarray, indices: jnp.ndarray,
+                           *, interpret: bool = False) -> jnp.ndarray:
+    """bank [n_blocks, block_size], indices [max_dirty] int32 (-1 pad)
+    -> [max_dirty, block_size]."""
+    n_blocks, block_size = bank.shape
+    max_dirty = indices.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(max_dirty,),
+        in_specs=[
+            # clamp pad entries (-1) in the index_map; the kernel zeroes them
+            pl.BlockSpec((1, block_size),
+                         lambda i, idx: (jnp.maximum(idx[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_size), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _flush_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((max_dirty, block_size), bank.dtype),
+        interpret=interpret,
+    )(indices, bank)

@@ -1,0 +1,35 @@
+"""Jit'd public wrappers for selective flush / apply.
+
+`selective_flush` dispatches to the Pallas gather kernel (TPU, or
+interpret=True during CPU validation); `selective_apply` is the scatter
+inverse, left to XLA's native scatter (no Pallas win on TPU — see
+DESIGN.md kernel notes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.selective_flush.kernel import selective_flush_pallas
+from repro.kernels.selective_flush import ref
+
+
+def selective_flush(bank: jnp.ndarray, indices: jnp.ndarray,
+                    *, use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Compact bank rows named by `indices` (-1 padded) into a dense buffer."""
+    if use_pallas is None:
+        use_pallas = True
+    if not use_pallas:
+        return ref.selective_flush_ref(bank, indices)
+    if interpret is None:
+        interpret = default_interpret()
+    return selective_flush_pallas(bank, indices, interpret=interpret)
+
+
+@jax.jit
+def selective_apply(bank: jnp.ndarray, updates: jnp.ndarray,
+                    indices: jnp.ndarray) -> jnp.ndarray:
+    """Scatter compacted updates back into the bank (the remote 'acquire'
+    side applying a flushed delta)."""
+    return ref.selective_apply_ref(bank, updates, indices)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the selective-flush gather-compact."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def selective_flush_ref(bank: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = bank[indices[i]] for indices[i] >= 0 else zeros.
+
+    bank: [n_blocks, block_size]; indices: [max_dirty] int32 (-1 padded).
+    Returns [max_dirty, block_size] in bank.dtype."""
+    safe = jnp.clip(indices, 0, bank.shape[0] - 1)
+    out = bank[safe]
+    return jnp.where((indices >= 0)[:, None], out, jnp.zeros_like(out))
+
+
+def selective_apply_ref(bank: jnp.ndarray, updates: jnp.ndarray,
+                        indices: jnp.ndarray) -> jnp.ndarray:
+    """Inverse: bank[indices[i]] = updates[i] for valid i (scatter)."""
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, bank.shape[0])  # dropped
+    return bank.at[safe].set(jnp.where(valid[:, None], updates,
+                                       jnp.zeros_like(updates)), mode="drop")

@@ -1,0 +1,1 @@
+from repro.kernels.topk_router.ops import topk_router  # noqa: F401

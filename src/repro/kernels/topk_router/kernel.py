@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused MoE router (softmax + iterative top-k + renorm).
+
+One (block_t, E) tile of router logits is loaded to VMEM once; softmax and k
+argmax/mask iterations (k is small and static) run entirely in registers/VMEM,
+emitting the compact (weights, indices) pair.  Fusing avoids k round trips
+to HBM that a lowered lax.top_k chain would cost on the [T, E] probabilities.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _router_kernel(x_ref, w_ref, i_ref, *, k: int, renormalize: bool):
+    x = x_ref[...].astype(jnp.float32)                  # [bt, E]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    remaining = probs
+    for kk in range(k):
+        v = jnp.max(remaining, axis=-1)                 # [bt]
+        idx = jnp.argmax(remaining, axis=-1).astype(jnp.int32)
+        w_ref[:, kk] = v
+        i_ref[:, kk] = idx
+        remaining = jnp.where(cols == idx[:, None], NEG_INF, remaining)
+    if renormalize:
+        total = jnp.zeros_like(w_ref[:, 0])
+        for kk in range(k):
+            total = total + w_ref[:, kk]
+        for kk in range(k):
+            w_ref[:, kk] = w_ref[:, kk] / jnp.maximum(total, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "renormalize", "block_t",
+                                             "interpret"))
+def topk_router_pallas(logits: jnp.ndarray, k: int, *, renormalize: bool = True,
+                       block_t: int = 256, interpret: bool = False):
+    t, e = logits.shape
+    block_t = min(block_t, t)
+    padded = (t + block_t - 1) // block_t * block_t
+    x = logits
+    if padded != t:
+        x = jnp.pad(x, ((0, padded - t), (0, 0)))
+    kern = functools.partial(_router_kernel, k=k, renormalize=renormalize)
+    w, i = pl.pallas_call(
+        kern,
+        grid=(padded // block_t,),
+        in_specs=[pl.BlockSpec((block_t, e), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((block_t, k), lambda b: (b, 0)),
+                   pl.BlockSpec((block_t, k), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((padded, k), jnp.float32),
+                   jax.ShapeDtypeStruct((padded, k), jnp.int32)],
+        interpret=interpret,
+    )(x)
+    return w[:t], i[:t]

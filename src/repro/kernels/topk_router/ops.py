@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the fused MoE router."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.topk_router.kernel import topk_router_pallas
+from repro.kernels.topk_router import ref
+
+
+def topk_router(logits: jnp.ndarray, k: int, *, renormalize: bool = True,
+                use_pallas: bool = False, interpret: bool | None = None):
+    """Router for MoE dispatch.  The jnp path is differentiable and used in
+    training; the Pallas path is the fused serving kernel."""
+    if not use_pallas:
+        return ref.topk_router_ref(logits, k, renormalize=renormalize)
+    if interpret is None:
+        interpret = default_interpret()
+    return topk_router_pallas(logits, k, renormalize=renormalize,
+                              interpret=interpret)

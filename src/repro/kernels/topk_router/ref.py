@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: MoE router = softmax + top-k + renormalize."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_router_ref(logits: jnp.ndarray, k: int, *, renormalize: bool = True):
+    """logits [T, E] -> (weights [T, k] f32, idx [T, k] i32), descending."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    if renormalize:
+        vals = vals / jnp.sum(vals, axis=-1, keepdims=True)
+    return vals, idx.astype(jnp.int32)

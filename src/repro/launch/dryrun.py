@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks device count on first init.
+# This flag lives ONLY here — smoke tests and benches see the real device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct inputs (no allocation), and extract the
+per-device memory analysis, FLOP/byte cost analysis, and collective byte
+counts that feed EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as SP
+from repro.models.registry import ARCH_IDS, build, get_config, input_specs
+from repro.optim import make_optimizer
+from repro.sharding import param_specs, use_mesh
+from repro.train.train_step import make_train_step
+
+# TPU v5e-class hardware constants (EXPERIMENTS.md §Roofline)
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+
+# HLO text: `%name = f32[8,128]{1,0} all-reduce(...)` or tuple-shaped results
+_COLL_RE = re.compile(
+    r"=\s*\(?((?:\w+\[[\d,]*\](?:\{[^}]*\})?(?:,\s*)?)+)\)?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective in the (SPMD-partitioned,
+    per-device) HLO."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2).lower()
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes):
+            dtype, dims = sm.group(1), sm.group(2)
+            b = _DTYPE_BYTES.get(dtype, 4)
+            for d in dims.split(","):
+                if d:
+                    b *= int(d)
+            nbytes += b
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+def _abs_key():
+    return jax.random.PRNGKey(0)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               fsdp_over_pod: bool = False, block_k: int | None = None,
+               seq_parallel: bool = False, remat: str | None = None,
+               microbatch: int | None = None, serve_replicated: bool = False,
+               kv_alt: bool = False):
+    import dataclasses
+    cfg = get_config(arch)
+    if seq_parallel or remat or microbatch:
+        cfg = dataclasses.replace(
+            cfg, seq_parallel=seq_parallel or cfg.seq_parallel,
+            remat_policy=remat or cfg.remat_policy,
+            microbatch=microbatch or cfg.microbatch)
+    shape = SHAPES[shape_name]
+    if not applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build(cfg)
+    t0 = time.time()
+    from repro.sharding import make_rules
+    rules = make_rules(mesh, fsdp_over_pod=fsdp_over_pod)
+    with use_mesh(mesh, rules):
+        params_abs = jax.eval_shape(model.init, _abs_key())
+        p_specs = param_specs(params_abs)
+        if serve_replicated and shape.kind != "train":
+            from repro.sharding import drop_axes
+            p_specs = drop_axes(p_specs, axes=("data", "pod"))
+        p_sh = SP.to_shardings(p_specs, mesh)
+        kw = {}
+        if block_k:
+            kw["block_k"] = block_k
+        ins = input_specs(cfg, shape)
+        if shape.kind == "train":
+            opt_init, opt_update = make_optimizer(cfg.optimizer)
+            n_micro = (shape.global_batch // cfg.microbatch
+                       if cfg.microbatch else None)
+            step = make_train_step(model, opt_init, opt_update, n_micro)
+            opt_abs = jax.eval_shape(opt_init, params_abs)
+            o_sh = SP.to_shardings(param_specs(opt_abs), mesh)
+            b_sh = SP.to_shardings(SP.batch_specs(cfg, shape, mesh), mesh)
+            jf = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh["batch"]),
+                         out_shardings=(p_sh, o_sh, None))
+            lowered = jf.lower(params_abs, opt_abs, ins["batch"])
+        elif shape.kind == "prefill":
+            b_sh = SP.to_shardings(SP.batch_specs(cfg, shape, mesh), mesh)
+            jf = jax.jit(lambda p, b: model.prefill(p, b, **kw),
+                         in_shardings=(p_sh, b_sh["batch"]))
+            lowered = jf.lower(params_abs, ins["batch"])
+        else:  # decode
+            d_sh = SP.to_shardings(
+                SP.decode_input_specs(cfg, shape, mesh, kv_alt=kv_alt), mesh)
+            jf = jax.jit(
+                lambda p, c, t, kl: model.decode_step(p, c, t, kl, **kw),
+                in_shardings=(p_sh, d_sh["cache"], d_sh["tokens"],
+                              d_sh["kv_len"]),
+                out_shardings=(None, d_sh["cache"]))
+            lowered = jf.lower(params_abs, ins["cache"], ins["tokens"],
+                               ins["kv_len"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "multi" if multi_pod else "single",
+               "status": "ok", "n_devices": mesh.devices.size,
+               "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1)}
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            rec["cost"] = {k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float))
+                           and k in ("flops", "bytes accessed",
+                                     "transcendentals", "optimal_seconds")}
+        except Exception as e:  # pragma: no cover
+            rec["cost"] = {"error": str(e)}
+        try:
+            rec["collectives"] = collective_bytes(compiled.as_text())
+        except Exception as e:  # pragma: no cover
+            rec["collectives"] = {"error": str(e)}
+        # analytic model FLOPs for §Roofline's usefulness ratio
+        n_active = cfg.active_param_count()
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        mult = 6 if shape.kind == "train" else 2
+        rec["model_flops"] = float(mult * n_active * tokens)
+        rec["param_count"] = cfg.param_count()
+        rec["active_param_count"] = n_active
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--fsdp-over-pod", action="store_true")
+    ap.add_argument("--block-k", type=int, default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots"])
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--serve-replicated", action="store_true")
+    ap.add_argument("--kv-alt", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                name = (f"{arch}_{shape}_{'multi' if multi else 'single'}"
+                        f"{args.tag}")
+                path = os.path.join(args.out, name + ".json")
+                if os.path.exists(path):
+                    print(f"[cached] {name}")
+                    results.append(json.load(open(path)))
+                    continue
+                print(f"[dryrun] {name} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi,
+                                     fsdp_over_pod=args.fsdp_over_pod,
+                                     block_k=args.block_k,
+                                     seq_parallel=args.seq_parallel,
+                                     remat=args.remat,
+                                     microbatch=args.microbatch,
+                                     serve_replicated=args.serve_replicated,
+                                     kv_alt=args.kv_alt)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": str(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                json.dump(rec, open(path, "w"), indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mem = rec.get("memory", {})
+                    tb = mem.get("temp_size_in_bytes")
+                    extra = (f" compile={rec['compile_s']}s"
+                             f" temp={tb/2**30:.2f}GiB" if tb else "")
+                print(f"[{status}] {name}{extra}", flush=True)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\nTOTAL ok={n_ok} skipped={n_skip} error={n_err}")
+    if n_err:
+        for r in results:
+            if r["status"] == "error":
+                print(f"  ERROR {r['arch']} {r['shape']} {r['mesh']}: "
+                      f"{r['error'][:200]}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod = 16x16 = 256 chips ('data','model'); multi-pod = 2 pods
+x 256 = 512 chips with the leading 'pod' axis crossing the DCI."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run launcher must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for in-process sharding tests (8 forced host devices)."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

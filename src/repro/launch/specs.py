@@ -1,0 +1,180 @@
+"""Input/parameter sharding specs for each (arch x shape x mesh) dry-run cell.
+
+Cache layout rules (DESIGN.md §6, baseline — §Perf iterates from here):
+  * batch dims shard over ('pod','data') when divisible;
+  * KV-cache heads shard over 'model' when n_kv_heads divides;
+    otherwise the cache *sequence* axis shards over 'model'
+    (distributed flash-decode: softmax psums are tiny);
+  * long_500k (batch 1): sequence shards over ('data','model') or 'data'
+    so a 512k cache spreads across the pod;
+  * Mamba2 / xLSTM recurrent states: inner channel dims over 'model' when
+    divisible, batch over data.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import registry as R
+from repro.sharding import make_rules, param_specs
+
+
+def _ax(rules, name):
+    ax = rules.get(name)
+    if ax is None:
+        return None
+    return ax[0] if len(ax) == 1 else tuple(ax)
+
+
+def _mesh_size(mesh: Mesh, logical_axes) -> int:
+    if logical_axes is None:
+        return 1
+    names = logical_axes if isinstance(logical_axes, tuple) else (logical_axes,)
+    n = 1
+    for a in names:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    return n
+
+
+def batch_axis(mesh: Mesh, rules, gb: int):
+    bat = _ax(rules, "batch")
+    return bat if gb % _mesh_size(mesh, bat) == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh) -> Any:
+    """Spec tree matching registry.input_specs structure for train/prefill."""
+    rules = make_rules(mesh)
+    bat = batch_axis(mesh, rules, shape.global_batch)
+    specs = {"tokens": P(bat, None), "labels": P(bat, None)}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(bat, None, None)
+    if cfg.family == "encdec":
+        specs["src_embeds"] = P(bat, None, None)
+    if shape.kind == "prefill":
+        specs.pop("labels")
+    return {"batch": specs}
+
+
+def _kv_spec(cfg: ModelConfig, mesh: Mesh, rules, gb: int, *, stacked=True,
+             kv_alt: bool = False):
+    """Spec for a [L?, B, Hkv, S, D] KV cache leaf."""
+    tp = _ax(rules, "tp")
+    n_tp = _mesh_size(mesh, tp)
+    bat = batch_axis(mesh, rules, gb)
+    if cfg.n_kv_heads % n_tp == 0:
+        h_ax, s_ax = tp, None
+    elif kv_alt and gb % n_tp == 0:
+        # alt layout (§Perf): batch over the TP axis, sequence over data —
+        # the kv_len scatter stays shard-local (no cache resharding)
+        data = _ax(rules, "seqs")
+        body = (tp, None, data, None)
+        return P(None, *body) if stacked else P(*body)
+    else:
+        h_ax, s_ax = None, tp
+    if gb == 1:  # long-context: spread the sequence as widely as possible
+        bat = None
+        s_parts = []
+        data = _ax(rules, "seqs")
+        if data is not None:
+            s_parts.extend(data if isinstance(data, tuple) else (data,))
+        if h_ax is None and tp is not None:
+            s_parts.extend(tp if isinstance(tp, tuple) else (tp,))
+        s_ax = (tuple(s_parts) if len(s_parts) > 1
+                else (s_parts[0] if s_parts else None))
+    body = (bat, h_ax, s_ax, None)
+    return P(None, *body) if stacked else P(*body)
+
+
+def _mla_spec(cfg, mesh, rules, gb):
+    """Spec for MLA latent caches [L, B, S, r]: sequence over 'model'."""
+    tp = _ax(rules, "tp")
+    bat = batch_axis(mesh, rules, gb) if gb > 1 else None
+    s_ax = tp
+    if gb == 1:
+        data = _ax(rules, "seqs")
+        parts = list(data if isinstance(data, tuple) else (data,)) + \
+            list(tp if isinstance(tp, tuple) else (tp,))
+        s_ax = tuple(parts)
+    return P(None, bat, s_ax, None)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+                kv_alt: bool = False) -> Any:
+    rules = make_rules(mesh)
+    gb = shape.global_batch
+    bat = batch_axis(mesh, rules, gb)
+    tp = _ax(rules, "tp")
+    n_tp = _mesh_size(mesh, tp)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        if cfg.mla is not None:
+            one = lambda: (_mla_spec(cfg, mesh, rules, gb),
+                           _mla_spec(cfg, mesh, rules, gb))
+        else:
+            one = lambda: (_kv_spec(cfg, mesh, rules, gb, kv_alt=kv_alt),
+                           _kv_spec(cfg, mesh, rules, gb, kv_alt=kv_alt))
+        n_groups = 2 if (cfg.moe and cfg.moe.first_k_dense) else 1
+        return [one() for _ in range(n_groups)]
+
+    if fam == "encdec":
+        kv = lambda: (_kv_spec(cfg, mesh, rules, gb, kv_alt=kv_alt),
+                      _kv_spec(cfg, mesh, rules, gb, kv_alt=kv_alt))
+        return (kv(), kv())
+
+    if fam == "hybrid":
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        h = di // s.head_dim
+        conv_c = di + 2 * s.n_groups * s.d_state
+        conv_ax = tp if conv_c % n_tp == 0 else None
+        h_ax = tp if h % n_tp == 0 else None
+        return {"mamba": {"conv": P(None, bat, None, conv_ax),
+                          "ssm": P(None, bat, h_ax, None, None)},
+                "attn_kv": (_kv_spec(cfg, mesh, rules, gb),
+                            _kv_spec(cfg, mesh, rules, gb))}
+
+    if fam == "ssm_xlstm":
+        # tiny states: batch over data, inner dims over model when divisible
+        di = 2 * cfg.d_model
+        dh = di // cfg.n_heads
+        dk_ax = tp if dh % n_tp == 0 else None
+        out = []
+        for ch in (cfg.xlstm_pattern or "ms" * (cfg.n_layers // 2)):
+            if ch == "m":
+                out.append({"conv": P(bat, None, None),
+                            "mlstm": _mlstm_spec(bat, dk_ax)})
+            else:
+                out.append({"slstm": _slstm_spec(bat)})
+        return out
+    raise ValueError(fam)
+
+
+def _mlstm_spec(bat, dk_ax):
+    from repro.models.ssm import MLSTMState
+    return MLSTMState(C=P(bat, None, dk_ax, None), n=P(bat, None, dk_ax),
+                      m=P(bat, None))
+
+
+def _slstm_spec(bat):
+    from repro.models.ssm import SLSTMState
+    return SLSTMState(c=P(bat, None, None), n=P(bat, None, None),
+                      h=P(bat, None, None), m=P(bat, None, None))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh,
+                       kv_alt: bool = False) -> Any:
+    rules = make_rules(mesh)
+    bat = batch_axis(mesh, rules, shape.global_batch)
+    return {"cache": cache_specs(cfg, shape, mesh, kv_alt=kv_alt),
+            "tokens": P(bat, None),
+            "kv_len": P(bat)}
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

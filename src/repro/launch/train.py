@@ -1,0 +1,61 @@
+"""Training driver.
+
+CPU-scale example:
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
+      --steps 20 --batch 8 --seq 128
+
+Cluster usage (documented; the dry-run validates the lowering): run one
+process per host with jax.distributed.initialize(), pass --mesh single or
+--mesh multi, and the same script pjit-shards over the production mesh."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.models.registry import get_config
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "debug", "single", "multi"])
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (FT demo)")
+    args = ap.parse_args()
+
+    mesh = None
+    if args.mesh == "debug":
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh()
+    elif args.mesh in ("single", "multi"):
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tcfg = TrainConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                       lr=args.lr, ckpt_dir=args.ckpt_dir,
+                       microbatch=args.microbatch)
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
+    trainer.run(fail_at=args.fail_at)
+    for m in trainer.metrics_log:
+        print(json.dumps(m))
+    if trainer.metrics_log:
+        first = trainer.metrics_log[0].get("loss")
+        last = trainer.metrics_log[-1].get("loss")
+        print(f"loss {first:.4f} -> {last:.4f}  restarts={trainer.restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Attention modules: GQA (with optional QKV bias / partial rotary) and
+DeepSeek-style MLA (multi-head latent attention) with the absorbed decode
+path over a compressed latent KV cache.
+
+Each module exposes init / train (full-sequence causal) / decode
+(single token against a cache) and returns cache updates for prefill.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import shard
+
+
+# ----------------------------------------------------------------- GQA
+
+
+def gqa_init(key, cfg: ModelConfig, dtype):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, h * hd, dtype),
+        "wk": L.dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": L.dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bias_q"] = jnp.zeros((h * hd,), dtype)
+        p["bias_k"] = jnp.zeros((hkv * hd,), dtype)
+        p["bias_v"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bias_q"], k + p["bias_k"], v + p["bias_v"]
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    rd = int(cfg.partial_rotary * hd)
+    q = L.apply_rope(q, positions[:, None, :], cfg.rope_theta, rotary_dim=rd)
+    k = L.apply_rope(k, positions[:, None, :], cfg.rope_theta, rotary_dim=rd)
+    q = shard(q, "batch", "tp", None, None)
+    k = shard(k, "batch", "tp", None, None)
+    v = shard(v, "batch", "tp", None, None)
+    return q, k, v
+
+
+def gqa_train(p, cfg: ModelConfig, x, positions, *, causal=True,
+              return_cache=False, block_k: int = 512):
+    """x [B,S,d]; positions [B,S].  Returns (out [B,S,d], cache|None)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = L.blockwise_attention(q, k, v, causal=causal, block_k=block_k)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+    out = o @ p["wo"]
+    return (out, (k, v)) if return_cache else (out, None)
+
+
+def gqa_cross(p, cfg: ModelConfig, x, kv_cache, *, block_k: int = 512):
+    """Cross attention: q from x, fixed (k, v) from the encoder."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bias_q"]
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k, v = kv_cache
+    o = L.blockwise_attention(q, k, v, causal=False, block_k=block_k)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return o @ p["wo"]
+
+
+def gqa_encode_kv(p, cfg: ModelConfig, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    b, s, _ = enc_out.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bias_k"], v + p["bias_v"]
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cache: Tuple, kv_len,
+               *, block_k: int = 2048):
+    """x [B,1,d]; cache (k,v) [B,Hkv,S,D]; kv_len [B] — token goes to slot
+    kv_len.  Returns (out [B,1,d], new_cache)."""
+    b = x.shape[0]
+    pos = kv_len[:, None]  # [B,1]
+    q, k_new, v_new = _qkv(p, cfg, x, pos)
+    k, v = cache
+    bidx = jnp.arange(b)
+    k = k.at[bidx, :, kv_len].set(k_new[:, :, 0].astype(k.dtype))
+    v = v.at[bidx, :, kv_len].set(v_new[:, :, 0].astype(v.dtype))
+    o = L.decode_attention(q[:, :, 0], k, v, kv_len + 1, block_k=block_k)
+    out = o.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, (k, v)
+
+
+# ----------------------------------------------------------------- MLA
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": L.dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "wq_b": L.dense_init(ks[1], m.q_lora_rank, h * (dn + dr), dtype),
+        "wkv_a": L.dense_init(ks[2], d, m.kv_lora_rank + dr, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "wkv_b": L.dense_init(ks[3], m.kv_lora_rank, h * (dn + dv), dtype),
+        "wo": L.dense_init(ks[4], h * dv, d, dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    q = L.rmsnorm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = L.apply_rope(qr, positions[:, None, :], cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_latent(p, cfg, x, positions):
+    m = cfg.mla
+    kv_a = x @ p["wkv_a"]                       # [B,S,r+dr]
+    c = L.rmsnorm(kv_a[..., :m.kv_lora_rank], p["kv_norm"])
+    kr = kv_a[..., m.kv_lora_rank:]             # [B,S,dr] shared across heads
+    kr = L.apply_rope(kr[:, None], positions[:, None, :], cfg.rope_theta)[:, 0]
+    return c, kr
+
+
+def mla_train(p, cfg: ModelConfig, x, positions, *, causal=True,
+              return_cache=False, block_k: int = 512):
+    """Non-absorbed full-sequence path (training / prefill)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    qn, qr = _mla_q(p, cfg, x, positions)
+    c, kr = _mla_latent(p, cfg, x, positions)
+    kv = (c @ p["wkv_b"]).reshape(b, s, h, dn + dv).transpose(0, 2, 1, 3)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr[:, None], (b, h, s, dr))],
+                        axis=-1)
+    scale = (dn + dr) ** -0.5
+    o = L.blockwise_attention(q, k, v, causal=causal, scale=scale,
+                              block_k=block_k)
+    out = o.transpose(0, 2, 1, 3).reshape(b, s, h * dv) @ p["wo"]
+    return (out, (c, kr)) if return_cache else (out, None)
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, kv_len, *, block_k: int = 2048):
+    """Absorbed decode over the latent cache (c [B,S,r], kr [B,S,dr]).
+
+    score_h(s) = (W_UK_h^T q_nope_h) · c_s + q_rope_h · kr_s
+    out_h      = W_UV_h^T (softmax · c)          — O(S·(r+dr)) per head."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    r = m.kv_lora_rank
+    pos = kv_len[:, None]
+    qn, qr = _mla_q(p, cfg, x, pos)            # [B,h,1,dn], [B,h,1,dr]
+    c_new, kr_new = _mla_latent(p, cfg, x, pos)  # [B,1,r], [B,1,dr]
+    c_cache, kr_cache = cache
+    bidx = jnp.arange(b)
+    c_cache = c_cache.at[bidx, kv_len].set(c_new[:, 0].astype(c_cache.dtype))
+    kr_cache = kr_cache.at[bidx, kv_len].set(kr_new[:, 0].astype(kr_cache.dtype))
+
+    w_uk = p["wkv_b"][:, :].reshape(r, h, dn + dv)[:, :, :dn]   # [r,h,dn]
+    w_uv = p["wkv_b"][:, :].reshape(r, h, dn + dv)[:, :, dn:]   # [r,h,dv]
+    q_lat = jnp.einsum("bhd,rhd->bhr", qn[:, :, 0], w_uk)       # absorb
+    # treat (q_lat ++ qr) against cache (c ++ kr) as 1-kv-head attention
+    q_full = jnp.concatenate([q_lat, qr[:, :, 0]], axis=-1)     # [B,h,r+dr]
+    kv_full = jnp.concatenate([c_cache, kr_cache], axis=-1)     # [B,S,r+dr]
+    scale = (dn + dr) ** -0.5
+    s_len = kv_full.shape[1]
+    ctx = L.decode_attention(q_full, kv_full[:, None], c_cache[:, None],
+                             kv_len + 1, scale=scale, block_k=block_k)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv)
+    out = out.reshape(b, 1, h * dv) @ p["wo"]
+    del s_len
+    return out, (c_cache, kr_cache)

@@ -1,0 +1,193 @@
+"""Foundational layers — functional (pytree params + pure apply fns).
+
+Attention is implemented *blockwise* (online softmax over KV blocks via
+lax.scan) so the lowered HLO keeps O(S·block) live memory rather than
+O(S^2); this is what makes the 32k-prefill dry-run cells honest without
+requiring the Pallas kernel at trace time (DESIGN.md §6.2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict
+
+# ---------------------------------------------------------------- init utils
+
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    scale = math.sqrt(1.0 / d_in)
+    return uniform_init(key, (d_in, d_out), scale, dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ------------------------------------------------------------------- norms
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0, rotary_dim: int | None = None):
+    rd = rotary_dim or head_dim
+    return 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def apply_rope(x, positions, theta: float = 10000.0,
+               rotary_dim: int | None = None):
+    """x [..., S, D] (head dim last); positions [..., S] int32."""
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    inv = rope_freqs(d, theta, rd)
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, rd/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([y1, y2], axis=-1).reshape(*xr.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rd:]], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, block_k: int = 512,
+                        q_offset=0, kv_len=None,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Online-softmax attention, O(S_q · block_k) live memory.
+
+    q [B, H, Sq, D]; k, v [B, Hkv, Sk, D]; Hq % Hkv == 0.
+    `q_offset`: absolute position of q[..,0,:] (for prefill continuation).
+    `kv_len` [B]: valid KV prefix (for decode over ring caches)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]  # value head dim may differ (e.g. MLA latent values)
+    group = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_k = min(block_k, sk)
+    nblk = (sk + block_k - 1) // block_k
+    pad = nblk * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, hkv, nblk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nblk, block_k, dv).transpose(2, 0, 1, 3, 4)
+
+    qf = q.astype(jnp.float32) * scale
+    rows = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        jblk, kblk, vblk = inp
+        kf = kblk.astype(jnp.float32)
+        # GQA: expand kv heads to q heads
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vblk.astype(jnp.float32), group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+        cols = jblk * block_k + jnp.arange(block_k)
+        mask = jnp.ones((sq, block_k), bool)
+        if causal:
+            mask = mask & (rows[:, None] >= cols[None, :])
+        mask = mask & (cols[None, :] < sk)
+        if kv_len is not None:
+            s = jnp.where(cols[None, None, None, :] < kv_len[:, None, None, None],
+                          s, NEG_INF)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0),
+                              (jnp.arange(nblk), kb, vb))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, scale: float | None = None,
+                     block_k: int = 2048) -> jnp.ndarray:
+    """Single-token decode: q [B, H, D], cache k/v [B, Hkv, S, D], kv_len [B].
+
+    Direct (non-blockwise) form: at q-length 1 the score tensor is only
+    O(B·H·S), and the grouped einsum avoids materializing repeated KV heads.
+    Under GSPMD this shards cleanly with the cache sequence axis distributed:
+    the softmax reductions become tiny psums (distributed flash-decode)."""
+    del block_k
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    dv = v.shape[-1]
+    group = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    # keep the cache operands in their storage dtype and accumulate in f32
+    # (preferred_element_type) — upcasting k/v wholesale makes XLA hoist a
+    # full-cache f32 copy out of the layer scan (§Perf, decode hillclimb)
+    qg = (q.astype(jnp.float32) * scale).astype(k.dtype) \
+        .reshape(b, hkv, group, d)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    pos = jnp.arange(s)[None, None, None, :]
+    logits = jnp.where(pos < kv_len[:, None, None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bksd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- mlp
+
+
+def swiglu_init(key, d, f, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": dense_init(k1, d, f, dtype), "w3": dense_init(k2, d, f, dtype),
+            "w2": dense_init(k3, f, d, dtype)}
+
+
+def swiglu_apply(p, x):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+def gelu_mlp_init(key, d, f, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d, f, dtype), "wo_mlp": dense_init(k2, f, d, dtype),
+            "bias_i": jnp.zeros((f,), dtype), "bias_o": jnp.zeros((d,), dtype)}
+
+
+def gelu_mlp_apply(p, x):
+    h = jax.nn.gelu((x @ p["wi"]) + p["bias_i"])
+    return (h @ p["wo_mlp"]) + p["bias_o"]

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with sort-based (dropping) dispatch.
+
+Dispatch avoids the O(T·E·C) one-hot blow-up: token-expert assignments are
+argsorted by expert, positions within each expert computed from the sorted
+run starts, tokens over capacity dropped, and experts applied as one batched
+[E, C, d] x [E, d, f] contraction (EP: the E dim shards over 'expert').
+
+MoE is also where the paper's asymmetric-sharing model shows up *inside* the
+model: each data shard touches only its routed experts' parameters, so
+cross-pod synchronization of expert banks is sparse — exactly what the
+sRSP-style selective delta sync exploits (distributed/hier_sync.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.kernels.topk_router.ref import topk_router_ref
+from repro.sharding import shard
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], d, e, jnp.float32),
+        "experts_w1": jax.random.uniform(ks[1], (e, d, f), dtype,
+                                         -(1 / d) ** 0.5, (1 / d) ** 0.5),
+        "experts_w3": jax.random.uniform(ks[2], (e, d, f), dtype,
+                                         -(1 / d) ** 0.5, (1 / d) ** 0.5),
+        "experts_w2": jax.random.uniform(ks[3], (e, f, d), dtype,
+                                         -(1 / f) ** 0.5, (1 / f) ** 0.5),
+    }
+    if m.n_shared:
+        p["shared"] = L.swiglu_init(ks[4], d, m.n_shared * m.d_expert, dtype)
+    return p
+
+
+def _dispatch_one_group(x2d, weights, idx, e, k, cap):
+    """Sort-based dispatch/combine for ONE token group.
+
+    Returns (buf [e, cap, d], combine closure inputs).  Pure local math —
+    vmapping this over groups (groups aligned to data shards) keeps the
+    dispatch communication-free under GSPMD (§Perf hillclimb B)."""
+    t, d = x2d.shape
+    eflat = idx.reshape(-1)                               # [t*k]
+    order = jnp.argsort(eflat, stable=True)
+    sorted_e = eflat[order]
+    wflat = weights.reshape(-1)[order]                    # sorted order!
+    token_of = order // k
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)  # drop slot
+    xs = x2d[token_of]                                    # [t*k, d]
+    buf = jnp.zeros((e * cap, d), x2d.dtype).at[dest].set(
+        jnp.where(keep[:, None], xs, 0), mode="drop")
+    return buf.reshape(e, cap, d), (token_of, wflat, keep, dest)
+
+
+def _combine_one_group(out, meta, t, e, cap):
+    token_of, wflat, keep, dest = meta
+    out = out.reshape(e * cap, -1)
+    gathered = jnp.where(keep[:, None],
+                         out[jnp.clip(dest, 0, e * cap - 1)], 0)
+    return jnp.zeros((t, out.shape[-1]), jnp.float32).at[token_of].add(
+        gathered.astype(jnp.float32) * wflat[:, None])
+
+
+def moe_apply(p, cfg: ModelConfig, x2d: jnp.ndarray):
+    """x2d [T, d] -> (y [T, d], aux_loss scalar, expert_counts [E]).
+
+    Group-blocked dispatch: tokens are split into `dispatch_groups` groups
+    (sharding-aligned with the data axis), each group sorts and capacity-
+    packs locally (GShard/Switch style).  Expert weights stay EP-sharded;
+    the only cross-shard communication is the combine reduction."""
+    m = cfg.moe
+    t, d = x2d.shape
+    e, k = m.n_experts, m.top_k
+    g = m.dispatch_groups
+    while g > 1 and t % g != 0:
+        g //= 2
+    tg = t // g
+    cap = max(int(tg * k / e * m.capacity_factor), 4)
+    cap = min(cap, tg)
+
+    logits = (x2d.astype(jnp.float32)) @ p["router"]      # [T, E]
+    weights, idx = topk_router_ref(logits, k)             # [T,k] f32 / i32
+
+    # ---- load-balance aux loss (Switch-style) ----
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=0)                          # mean router prob
+    onehot_top1 = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=0)                    # token fraction
+    aux = m.aux_loss_coef * e * jnp.sum(me * ce)
+
+    xg = x2d.reshape(g, tg, d)
+    wg = weights.reshape(g, tg, k)
+    ig = idx.reshape(g, tg, k)
+    buf, meta = jax.vmap(
+        lambda xx, ww, ii: _dispatch_one_group(xx, ww, ii, e, k, cap)
+    )(xg, wg, ig)
+    buf = shard(buf, "batch", None, None, None)           # [g, e, cap, d]
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["experts_w1"])) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["experts_w3"])
+    out = jnp.einsum("gecf,efd->gecd", h, p["experts_w2"])
+    out = shard(out, "batch", None, None, None)
+
+    y = jax.vmap(lambda oo, mm: _combine_one_group(oo, mm, tg, e, cap))(
+        out, meta)
+    y = y.reshape(t, d)
+
+    if m.n_shared:
+        y = y + L.swiglu_apply(p["shared"], x2d).astype(jnp.float32)
+
+    counts = jnp.sum(jax.nn.one_hot(idx.reshape(-1), e, dtype=jnp.float32),
+                     axis=0)
+    return y.astype(x2d.dtype), aux, counts

@@ -1,0 +1,145 @@
+"""Architecture registry: config name -> Model bundle (init / loss / prefill /
+decode_step / init_cache) + input_specs for every shape cell."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCfg, SHAPES, applicable
+from repro.models import transformer as T
+from repro.models import encdec as ED
+from repro.models import xlstm_model as XL
+from repro.models import zamba as ZB
+
+ARCH_IDS = [
+    "stablelm-12b", "qwen2.5-32b", "mistral-large-123b", "qwen1.5-32b",
+    "llava-next-mistral-7b", "granite-moe-1b-a400m", "deepseek-v3-671b",
+    "xlstm-125m", "seamless-m4t-large-v2", "zamba2-1.2b",
+]
+
+_MODULES = {
+    "stablelm-12b": "stablelm_12b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "mistral-large-123b": "mistral_large_123b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "xlstm-125m": "xlstm_125m",
+    "seamless-m4t-large-v2": "seamless_m4t_large",
+    "zamba2-1.2b": "zamba2_1b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable            # key -> params
+    loss: Callable            # (params, batch) -> (loss, metrics)
+    prefill: Callable         # (params, batch) -> (last_logits, cache)
+    decode_step: Callable     # (params, cache, tokens, kv_len) -> (logits, cache)
+    init_cache: Callable      # (b, max_len) -> cache pytree
+    grow_cache: Callable      # (cache, max_len) -> cache padded along seq axis
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def _pad_axis(x, axis, new_len):
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, new_len - x.shape[axis])
+    return jnp.pad(x, pads)
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: T.lm_init(key, cfg),
+            loss=lambda p, b, **kw: T.lm_loss(p, cfg, b, **kw),
+            prefill=lambda p, b, **kw: T.lm_prefill(p, cfg, b, **kw),
+            decode_step=lambda p, c, t, kl, **kw: T.lm_decode_step(
+                p, cfg, c, t, kl, **kw),
+            init_cache=lambda b, ml: T.lm_init_cache(cfg, b, ml),
+            grow_cache=lambda c, ml: T.lm_grow_cache(cfg, c, ml),
+        )
+    if fam == "ssm_xlstm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: XL.xlstm_init(key, cfg),
+            loss=lambda p, b, **kw: XL.xlstm_loss(p, cfg, b, **kw),
+            prefill=lambda p, b, **kw: XL.xlstm_prefill(p, cfg, b, **kw),
+            decode_step=lambda p, c, t, kl, **kw: XL.xlstm_decode_step(
+                p, cfg, c, t, kl, **kw),
+            init_cache=lambda b, ml: XL.xlstm_init_cache(cfg, b, ml),
+            grow_cache=lambda c, ml: c,  # constant-size recurrent state
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ZB.zamba_init(key, cfg),
+            loss=lambda p, b, **kw: ZB.zamba_loss(p, cfg, b, **kw),
+            prefill=lambda p, b, **kw: ZB.zamba_prefill(p, cfg, b, **kw),
+            decode_step=lambda p, c, t, kl, **kw: ZB.zamba_decode_step(
+                p, cfg, c, t, kl, **kw),
+            init_cache=lambda b, ml: ZB.zamba_init_cache(cfg, b, ml),
+            grow_cache=lambda c, ml: {
+                "mamba": c["mamba"],
+                "attn_kv": tuple(_pad_axis(x, 3, ml) for x in c["attn_kv"])},
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ED.encdec_init(key, cfg),
+            loss=lambda p, b, **kw: ED.encdec_loss(p, cfg, b, **kw),
+            prefill=lambda p, b, **kw: ED.encdec_prefill(p, cfg, b, **kw),
+            decode_step=lambda p, c, t, kl, **kw: ED.encdec_decode_step(
+                p, cfg, c, t, kl, **kw),
+            init_cache=lambda b, ml: ED.encdec_init_cache(
+                cfg, b, ml, max(ml // 8, 8)),
+            grow_cache=lambda c, ml: (
+                tuple(jax.tree.map(lambda x: _pad_axis(x, 3, ml), c[0])),
+                c[1]),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+FRONTEND_DIM = 1024
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    if not applicable(cfg, shape):
+        raise ValueError(f"{cfg.name} skips {shape.name} (DESIGN.md §4)")
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((gb, s), i32), "labels": sds((gb, s), i32)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = sds((gb, cfg.n_patches, FRONTEND_DIM), f32)
+        if cfg.family == "encdec":
+            batch["src_embeds"] = sds((gb, s, FRONTEND_DIM), f32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((gb, s), i32)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = sds((gb, cfg.n_patches, FRONTEND_DIM), f32)
+        if cfg.family == "encdec":
+            batch["src_embeds"] = sds((gb, s, FRONTEND_DIM), f32)
+        return {"batch": batch}
+    # decode: one new token against a max_len cache
+    model = build(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(gb, s))
+    return {"cache": cache,
+            "tokens": sds((gb, 1), i32),
+            "kv_len": sds((gb,), i32)}

@@ -1,0 +1,358 @@
+"""State-space / recurrent sequence mixers.
+
+* Mamba2 — chunked SSD (Dao & Gu 2024) for train/prefill, O(1)-state
+  recurrence for decode.  Used by zamba2 (hybrid).
+* mLSTM  — chunkwise-parallel matrix-memory LSTM with exp-gating and
+  m-stabilizer (xLSTM, arXiv:2405.04517); recurrent form for decode.
+* sLSTM  — scalar-memory recurrent cell with state mixing (lax.scan).
+
+All are O(1) state at decode time — these are the arch families that run the
+long_500k cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+# ============================================================== Mamba2 (SSD)
+
+
+def _segsum(x):
+    """x [..., l] -> [..., l, l]; S[i,j] = sum_{j < k <= i} x[k]; -inf above."""
+    l = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    s = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x, dA, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x  [b, l, h, p]   (pre-multiplied by dt)
+    dA [b, l, h]      (dt * A, negative)
+    B  [b, l, g, n], C [b, l, g, n]  (g groups; h % g == 0)
+    Returns (y [b, l, h, p], final_state [b, h, p, n])."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    B = jnp.repeat(B, rep, axis=2)          # [b,l,h,n]
+    C = jnp.repeat(C, rep, axis=2)
+    assert l % chunk == 0, (l, chunk)
+    nc, cl = l // chunk, chunk
+
+    xr = x.reshape(b, nc, cl, h, p)
+    Br = B.reshape(b, nc, cl, h, n)
+    Cr = C.reshape(b, nc, cl, h, n)
+    Ar = dA.reshape(b, nc, cl, h).transpose(0, 3, 1, 2)      # [b,h,nc,cl]
+    A_cum = jnp.cumsum(Ar, axis=-1)
+
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(Ar))                              # [b,h,nc,cl,cl]
+    Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        Cr, Br, Lmat, xr)
+
+    # per-chunk end states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)          # [b,h,nc,cl]
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Br, decay_states, xr)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cum[..., -1])                    # [b,h,nc]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                    # [b,h,p,n],[b,h]
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)               # [nc,b,h,p,n]
+    decay_t = chunk_decay.transpose(2, 0, 1)                 # [nc,b,h]
+    final, prev_states = lax.scan(step, init_state.astype(jnp.float32),
+                                  (states_t.astype(jnp.float32), decay_t))
+    prev_states = prev_states.transpose(1, 2, 0, 3, 4)       # [b,h,nc,p,n]
+
+    state_decay = jnp.exp(A_cum)                             # [b,h,nc,cl]
+    Y_off = jnp.einsum("bclhn,bhcpn,bhcl->bclhp", Cr, prev_states, state_decay)
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def mamba2_init(key, d_model: int, ssm, dtype):
+    di = ssm.expand * d_model
+    h = di // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    proj_out = 2 * di + 2 * g * n + h      # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,)) * (math.log(0.1) - math.log(0.001))
+                 + math.log(0.001))
+    return {
+        "in_proj": L.dense_init(ks[0], d_model, proj_out, dtype),
+        "conv_w": jax.random.normal(ks[1], (ssm.d_conv, 1, di + 2 * g * n),
+                                    dtype) * 0.1,
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_y": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(ks[3], di, d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x [b,l,c]; w [k,1,c]; state [b,k-1,c]|None.
+    Returns (y [b,l,c], new_state [b,k-1,c])."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    y = sum(xp[:, i:i + x.shape[1]] * w[i, 0] for i in range(k))
+    return y, new_state
+
+
+def mamba2_apply(p, ssm, d_model: int, x, *, init=None, chunk=None):
+    """Full-sequence Mamba2 mixer.  x [b,l,d] -> (y [b,l,d], state)."""
+    b, l, d = x.shape
+    di = ssm.expand * d_model
+    h = di // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    chunk = chunk or ssm.chunk
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = None if init is None else init["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [b,l,h]
+    A = -jnp.exp(p["a_log"])                                      # [h]
+    xh = xin.reshape(b, l, h, ssm.head_dim).astype(jnp.float32)
+    Bh = Bc.reshape(b, l, g, n).astype(jnp.float32)
+    Ch = Cc.reshape(b, l, g, n).astype(jnp.float32)
+    ssm_state = None if init is None else init["ssm"]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk  # zero-pad: dA=0 (decay 1) and x=0 leave state intact
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, final = ssd_chunked(xh * dt[..., None], dt * A, Bh, Ch, chunk,
+                           init_state=ssm_state)
+    if pad:
+        y = y[:, :l]
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, l, di)
+    y = L.rmsnorm(y, p["norm_y"]) * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": final}
+
+
+def mamba2_decode(p, ssm, d_model: int, x, state):
+    """Single-token recurrence.  x [b,1,d]; state {conv, ssm}."""
+    b = x.shape[0]
+    di = ssm.expand * d_model
+    h = di // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [b,h]
+    A = -jnp.exp(p["a_log"])
+    xh = xin[:, 0].reshape(b, h, ssm.head_dim).astype(jnp.float32)
+    Bh = jnp.repeat(Bc[:, 0].reshape(b, g, n), h // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc[:, 0].reshape(b, g, n), h // g, axis=1).astype(jnp.float32)
+    dec = jnp.exp(dt * A)                                          # [b,h]
+    hs = state["ssm"] * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", hs, Ch) + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di)
+    y = L.rmsnorm(y, p["norm_y"]) * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": hs}
+
+
+# ============================================================== mLSTM (xLSTM)
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray  # [b, h, dk, dv]
+    n: jnp.ndarray  # [b, h, dk]
+    m: jnp.ndarray  # [b, h]
+
+
+def mlstm_zero_state(b, h, dk, dv):
+    return MLSTMState(jnp.zeros((b, h, dk, dv), jnp.float32),
+                      jnp.zeros((b, h, dk), jnp.float32),
+                      jnp.full((b, h), -1e30, jnp.float32))
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk: int,
+                    state: MLSTMState | None = None):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v [b,l,h,dh]; i_raw,f_raw [b,l,h].  Returns (h [b,l,h,dh], state)."""
+    b, l, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:  # pad gates so padded steps neither decay nor write state
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zp) for a in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=40.0)
+        l = l + pad
+    nc, cl = l // chunk, chunk
+    scale = dk ** -0.5
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))     # [b,l,h]
+    logi = i_raw.astype(jnp.float32)
+    if state is None:
+        state = mlstm_zero_state(b, h, dk, dv)
+
+    qr = (q.astype(jnp.float32) * scale).reshape(b, nc, cl, h, dk)
+    kr = k.astype(jnp.float32).reshape(b, nc, cl, h, dk)
+    vr = v.astype(jnp.float32).reshape(b, nc, cl, h, dv)
+    fr = logf.reshape(b, nc, cl, h).transpose(0, 3, 1, 2)    # [b,h,nc,cl]
+    ir = logi.reshape(b, nc, cl, h).transpose(0, 3, 1, 2)
+    bcum = jnp.cumsum(fr, axis=-1)                           # [b,h,nc,cl]
+    btot = bcum[..., -1]                                     # [b,h,nc]
+    tril = jnp.tril(jnp.ones((cl, cl), bool))
+
+    def chunk_step(carry: MLSTMState, inp):
+        C_p, n_p, m_p = carry
+        qc, kc, vc, bc, ic, btc = inp
+        # qc [b,cl,h,dk] ...; bc/ic [b,h,cl]
+        # intra-chunk log weights computed HERE (inside remat) so the
+        # O(cl^2) decay matrix is a transient, not a saved residual
+        ldc = bc[..., :, None] - bc[..., None, :] + ic[..., None, :]
+        ldc = jnp.where(tril, ldc, -jnp.inf)                 # [b,h,cl,cl]
+        mint = jnp.max(ldc, axis=-1)                         # [b,h,cl]
+        m_inter = m_p[..., None] + bc                        # [b,h,cl]
+        m_t = jnp.maximum(mint, m_inter)
+        m_t = jnp.maximum(m_t, -1e30)
+        S = jnp.einsum("bthd,bshd->bhts", qc, kc) * jnp.exp(ldc - m_t[..., None])
+        inter_w = jnp.exp(m_inter - m_t)                     # [b,h,cl]
+        num = jnp.einsum("bhts,bshd->bthd", S, vc) + \
+            jnp.einsum("bthd,bhdv,bht->bthv", qc, C_p, inter_w)
+        den = jnp.sum(S, axis=-1) + \
+            jnp.einsum("bthd,bhd,bht->bht", qc, n_p, inter_w)  # [b,h,t]
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        hh = num / den.transpose(0, 2, 1)[..., None]         # [b,t,h,dv]
+        # state update to end of chunk
+        upd_w = btc[..., None] - bc + ic                     # [b,h,cl]
+        m_new = jnp.maximum(m_p + btc, jnp.max(upd_w, axis=-1))
+        C_new = C_p * jnp.exp(m_p + btc - m_new)[..., None, None] + \
+            jnp.einsum("bht,bthd,bthv->bhdv", jnp.exp(upd_w - m_new[..., None]),
+                       kc, vc)
+        n_new = n_p * jnp.exp(m_p + btc - m_new)[..., None] + \
+            jnp.einsum("bht,bthd->bhd", jnp.exp(upd_w - m_new[..., None]), kc)
+        return MLSTMState(C_new, n_new, m_new), hh
+
+    chunk_step = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (qr.transpose(1, 0, 2, 3, 4), kr.transpose(1, 0, 2, 3, 4),
+          vr.transpose(1, 0, 2, 3, 4), bcum.transpose(2, 0, 1, 3),
+          ir.transpose(2, 0, 1, 3), btot.transpose(2, 0, 1))
+    final, hs = lax.scan(chunk_step, state, xs)
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, l, h, dv)
+    if pad:
+        hs = hs[:, :l - pad]
+    return hs, final
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state: MLSTMState):
+    """Single-token recurrent mLSTM.  q,k,v [b,h,dh]; i,f [b,h]."""
+    dk = q.shape[-1]
+    scale = dk ** -0.5
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    logi = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state.m, logi)
+    fw = jnp.exp(logf + state.m - m_new)
+    iw = jnp.exp(logi - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = state.C * fw[..., None, None] + iw[..., None, None] * \
+        kf[..., :, None] * vf[..., None, :]
+    n = state.n * fw[..., None] + iw[..., None] * kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], MLSTMState(C, n, m_new)
+
+
+# ============================================================== sLSTM (xLSTM)
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # [b, h, dh]
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray  # [b, h, dh]
+
+
+def slstm_zero_state(b, h, dh):
+    z = jnp.zeros((b, h, dh), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((b, h, dh), -1e30, jnp.float32))
+
+
+def slstm_cell(gates_x, r_w, state: SLSTMState):
+    """One sLSTM step.  gates_x [b, 4, h, dh] (i,f,z,o pre-activations from
+    the input); r_w [4, h, dh, dh] recurrent block-diagonal weights."""
+    rec = jnp.einsum("bhd,ghde->bghe", state.h, r_w)       # [b,4,h,dh]
+    i_r, f_r, z_r, o_r = [gates_x[:, g] + rec[:, g] for g in range(4)]
+    m_new = jnp.maximum(f_r + state.m, i_r)
+    iw = jnp.exp(i_r - m_new)
+    fw = jnp.exp(f_r + state.m - m_new)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    c = fw * state.c + iw * z
+    n = fw * state.n + iw
+    hh = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, hh, m_new), hh
+
+
+def slstm_apply(gates_seq, r_w, state: SLSTMState, *, segment: int = 64):
+    """gates_seq [b, l, 4, h, dh] -> (h [b, l, h, dh], state).
+
+    BPTT memory control: outer scan saves the carry only at segment
+    boundaries; the inner (remat'd) scan recomputes within a segment."""
+    b, l = gates_seq.shape[0], gates_seq.shape[1]
+    segment = min(segment, l)
+    pad = (-l) % segment
+    g = gates_seq
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)) + ((0, 0),) * (g.ndim - 2))
+    nseg = (l + pad) // segment
+    g = g.reshape(b, nseg, segment, *g.shape[2:]).transpose(1, 2, 0, 3, 4, 5)
+
+    def inner(carry, gt):
+        return slstm_cell(gt, r_w, carry)
+
+    def outer(carry, gseg):
+        new, hs = lax.scan(inner, carry, gseg)
+        return new, hs
+
+    outer = jax.checkpoint(outer,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    final, hs = lax.scan(outer, state, g)   # hs [nseg, seg, b, h, dh]
+    hs = hs.reshape(nseg * segment, b, *hs.shape[3:]).transpose(1, 0, 2, 3)
+    if pad:
+        hs = hs[:, :l]
+    return hs, final

@@ -1,0 +1,306 @@
+"""Decoder-only transformer LM covering the dense / MoE / MLA / VLM families.
+
+Layers are scanned over stacked params (O(1) compile scaling in depth) with
+per-layer remat for training.  The same param tree drives three entry
+points: loss (train), prefill (build cache + last-token logits), and
+decode_step (one token against the cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.sharding import shard
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def _dtype(cfg):
+    return DTYPES[cfg.dtype]
+
+
+def stack_init(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def block_init(key, cfg: ModelConfig, kind: str):
+    """kind: 'dense' or 'moe' (ffn type); attention chosen by cfg.mla."""
+    dtype = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    attn = (A.mla_init(k1, cfg, dtype) if cfg.mla is not None
+            else A.gqa_init(k1, cfg, dtype))
+    if kind == "moe":
+        ffn = M.moe_init(k2, cfg, dtype)
+    elif cfg.act == "swiglu":
+        ffn = L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        ffn = L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return {"norm1": jnp.ones((cfg.d_model,), jnp.float32), "attn": attn,
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32), "ffn": ffn}
+
+
+def _ffn_apply(p, cfg: ModelConfig, kind: str, h2d):
+    if kind == "moe":
+        y, aux, _ = M.moe_apply(p, cfg, h2d)
+        return y, aux
+    if cfg.act == "swiglu":
+        return L.swiglu_apply(p, h2d), 0.0
+    return L.gelu_mlp_apply(p, h2d), 0.0
+
+
+def block_apply(p, cfg: ModelConfig, kind: str, h, positions, *,
+                return_cache=False, block_k=512):
+    """Full-sequence (train/prefill) block."""
+    b, s, d = h.shape
+    hn = L.rmsnorm(h, p["norm1"]) if cfg.norm == "rmsnorm" else \
+        L.layernorm(h, p["norm1"], jnp.zeros_like(p["norm1"]))
+    attn_fn = A.mla_train if cfg.mla is not None else A.gqa_train
+    a, cache = attn_fn(p["attn"], cfg, hn, positions,
+                       return_cache=return_cache, block_k=block_k)
+    h = h + a
+    hn = L.rmsnorm(h, p["norm2"]) if cfg.norm == "rmsnorm" else \
+        L.layernorm(h, p["norm2"], jnp.zeros_like(p["norm2"]))
+    f, aux = _ffn_apply(p["ffn"], cfg, kind, hn.reshape(b * s, d))
+    h = h + f.reshape(b, s, d)
+    # sequence parallelism: the residual stream lives seq-sharded on the TP
+    # axis; GSPMD turns the per-layer all-reduces into reduce-scatter +
+    # all-gather pairs (half the bytes) — EXPERIMENTS.md §Perf
+    h = shard(h, "batch", "sp" if cfg.seq_parallel else None, None)
+    return h, aux, cache
+
+
+def block_decode(p, cfg: ModelConfig, kind: str, h, cache, kv_len):
+    b, s, d = h.shape
+    hn = L.rmsnorm(h, p["norm1"]) if cfg.norm == "rmsnorm" else \
+        L.layernorm(h, p["norm1"], jnp.zeros_like(p["norm1"]))
+    if cfg.mla is not None:
+        a, cache = A.mla_decode(p["attn"], cfg, hn, cache, kv_len)
+    else:
+        a, cache = A.gqa_decode(p["attn"], cfg, hn, cache, kv_len)
+    h = h + a
+    hn = L.rmsnorm(h, p["norm2"]) if cfg.norm == "rmsnorm" else \
+        L.layernorm(h, p["norm2"], jnp.zeros_like(p["norm2"]))
+    f, _ = _ffn_apply(p["ffn"], cfg, kind, hn.reshape(b * s, d))
+    h = h + f.reshape(b, s, d)
+    return h, cache
+
+
+# ------------------------------------------------------------------- model
+
+
+def lm_init(key, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    n_main = cfg.n_layers - n_dense
+    main_kind = "moe" if cfg.moe else "dense"
+    params = {
+        "emb": L.embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "layers": stack_init(
+            lambda k: block_init(k, cfg, main_kind), ks[1], n_main),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if n_dense:
+        params["dense_layers"] = stack_init(
+            lambda k: block_init(k, cfg, "dense"), ks[2], n_dense)
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(ks[3], cfg.d_model, cfg.vocab, dtype)
+    if cfg.n_patches:
+        # stub modality frontend: project precomputed patch embeddings
+        params["patch_proj"] = L.dense_init(ks[4], 1024, cfg.d_model, dtype)
+    if cfg.mtp_heads:
+        params["mtp_proj"] = L.dense_init(ks[5], 2 * cfg.d_model, cfg.d_model,
+                                          dtype)
+        params["mtp_block"] = block_init(ks[6], cfg, "dense")
+        params["mtp_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return params
+
+
+def _embed(params, cfg: ModelConfig, tokens, patch_embeds=None):
+    h = params["emb"][tokens].astype(_dtype(cfg))
+    if cfg.n_patches and patch_embeds is not None:
+        pe = (patch_embeds.astype(_dtype(cfg)) @ params["patch_proj"])
+        npatch = pe.shape[1]
+        h = jnp.concatenate([pe, h[:, npatch:]], axis=1)
+    return shard(h, "batch", None, None)
+
+
+def _head(params, cfg: ModelConfig, h):
+    w = params["emb"].T if cfg.tie_embeddings else params["head"]
+    logits = h @ w
+    spec = ("batch",) + (None,) * (logits.ndim - 2) + ("tp",)
+    return shard(logits, *spec)
+
+
+REMAT_POLICIES = {
+    "full": jax.checkpoint_policies.nothing_saveable,
+    # selective: keep matmul outputs, recompute the cheap elementwise ops —
+    # removes the recompute pass's collectives (§Perf)
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def _run_stack(params_stack, cfg, kind, h, positions, *, remat=True,
+               block_k=512):
+    def body(carry, lp):
+        hh, aux = carry
+        hh, a, _ = block_apply(lp, cfg, kind, hh, positions, block_k=block_k)
+        return (hh, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[cfg.remat_policy])
+    (h, aux), _ = lax.scan(body, (h, 0.0), params_stack)
+    return h, aux
+
+
+def xent_loss(logits, labels, mask=None):
+    """Vocab-sharded stable cross entropy; no full-logit gather."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=lf.dtype)
+    gold = jnp.sum(lf * onehot, axis=-1)
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, remat=True, block_k=512):
+    """batch: tokens [B,S], labels [B,S] (+ patch_embeds).  Returns
+    (loss, metrics)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = _embed(params, cfg, tokens, batch.get("patch_embeds"))
+    if "dense_layers" in params:
+        h, _ = _run_stack(params["dense_layers"], cfg, "dense", h, positions,
+                          remat=remat, block_k=block_k)
+    kind = "moe" if cfg.moe else "dense"
+    h, aux = _run_stack(params["layers"], cfg, kind, h, positions,
+                        remat=remat, block_k=block_k)
+    h = L.rmsnorm(h, params["final_norm"])
+    logits = _head(params, cfg, h)
+    loss = xent_loss(logits, batch["labels"])
+    metrics = {"xent": loss, "aux": aux}
+    if cfg.mtp_heads:
+        # DeepSeek-style multi-token prediction (depth 1): predict t+2 from
+        # [h_t ; emb(t_{t+1})] through one extra block, shared head.
+        emb_next = params["emb"][batch["labels"]].astype(_dtype(cfg))
+        h_mtp = jnp.concatenate([L.rmsnorm(h, params["mtp_norm"]), emb_next],
+                                axis=-1) @ params["mtp_proj"]
+        h_mtp, _, _ = block_apply(params["mtp_block"], cfg, "dense", h_mtp,
+                                  positions, block_k=block_k)
+        logits2 = _head(params, cfg, L.rmsnorm(h_mtp, params["final_norm"]))
+        labels2 = jnp.concatenate([batch["labels"][:, 1:],
+                                   batch["labels"][:, -1:]], axis=1)
+        mask2 = jnp.concatenate([jnp.ones((b, s - 1)), jnp.zeros((b, 1))], 1)
+        mtp_loss = xent_loss(logits2, labels2, mask2)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ------------------------------------------------------------------ serving
+
+
+def lm_prefill(params, cfg: ModelConfig, batch, *, block_k=512):
+    """Returns (last_logits [B, V], cache pytree)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = _embed(params, cfg, tokens, batch.get("patch_embeds"))
+
+    def body(hh, lp_kind):
+        lp, kind = lp_kind
+        hh, _, cache = block_apply(lp, cfg, kind, hh, positions,
+                                   return_cache=True, block_k=block_k)
+        return hh, cache
+
+    caches = []
+    if "dense_layers" in params:
+        h, cache_d = lax.scan(lambda hh, lp: body(hh, (lp, "dense")),
+                              h, params["dense_layers"])
+        caches.append(cache_d)
+    kind = "moe" if cfg.moe else "dense"
+    h, cache_m = lax.scan(lambda hh, lp: body(hh, (lp, kind)),
+                          h, params["layers"])
+    caches.append(cache_m)
+    h = L.rmsnorm(h, params["final_norm"])
+    logits = _head(params, cfg, h[:, -1])
+    return logits, caches
+
+
+def _grow_cache(cache, max_len: int, axis: int):
+    """Pad prefill caches along the sequence axis to max_len slots."""
+    def pad(x):
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, max_len - x.shape[axis])
+        return jnp.pad(x, pads)
+    return jax.tree.map(pad, cache)
+
+
+def lm_grow_cache(cfg, caches, max_len):
+    axis = 2 if cfg.mla is not None else 3  # (c,kr):[L,B,S,*] vs (k,v):[L,B,H,S,D]
+    return [_grow_cache(c, max_len, axis) for c in caches]
+
+
+def lm_init_cache(cfg: ModelConfig, b: int, max_len: int):
+    """Zero decode cache (for dry-run decode cells the cache is an input)."""
+    dt = _dtype(cfg)
+    n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    n_main = cfg.n_layers - n_dense
+
+    def one(n):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return (jnp.zeros((n, b, max_len, m.kv_lora_rank), dt),
+                    jnp.zeros((n, b, max_len, m.qk_rope_head_dim), dt))
+        return (jnp.zeros((n, b, cfg.n_kv_heads, max_len, cfg.hd), dt),
+                jnp.zeros((n, b, cfg.n_kv_heads, max_len, cfg.hd), dt))
+
+    caches = []
+    if n_dense:
+        caches.append(one(n_dense))
+    caches.append(one(n_main))
+    return caches
+
+
+def lm_decode_step(params, cfg: ModelConfig, caches, tokens, kv_len,
+                   *, block_k=2048):
+    """tokens [B,1]; kv_len [B]; returns (logits [B,V], new caches)."""
+    h = _embed(params, cfg, tokens)
+
+    def body(hh, xs, kind):
+        lp, cache = xs
+        hh, cache = block_decode(lp, cfg, kind, hh, cache, kv_len)
+        return hh, cache
+
+    new_caches = []
+    ci = 0
+    if "dense_layers" in params:
+        h, cache_d = lax.scan(
+            functools.partial(body, kind="dense"), h,
+            (params["dense_layers"], caches[ci]))
+        new_caches.append(cache_d)
+        ci += 1
+    kind = "moe" if cfg.moe else "dense"
+    h, cache_m = lax.scan(functools.partial(body, kind=kind), h,
+                          (params["layers"], caches[ci]))
+    new_caches.append(cache_m)
+    h = L.rmsnorm(h, params["final_norm"])
+    logits = _head(params, cfg, h[:, -1])
+    return logits, new_caches

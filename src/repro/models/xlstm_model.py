@@ -1,0 +1,238 @@
+"""xLSTM language model: alternating mLSTM / sLSTM blocks (arXiv:2405.04517).
+
+mLSTM blocks use the chunkwise-parallel form for train/prefill and the O(1)
+matrix-memory recurrence for decode; sLSTM blocks are strictly sequential
+(lax.scan over time).  Constant-size state makes this family long_500k
+capable."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.transformer import DTYPES, xent_loss, _head
+from repro.sharding import shard
+
+D_CONV = 4
+
+
+def _dtype(cfg):
+    return DTYPES[cfg.dtype]
+
+
+# ------------------------------------------------------------- mLSTM block
+
+
+def mlstm_block_init(key, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    d = cfg.d_model
+    di = 2 * d                      # projection factor 2 (xLSTM paper)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "w_up": L.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": jax.random.normal(ks[1], (D_CONV, 1, di), dtype) * 0.1,
+        "wq": L.dense_init(ks[2], di, di, dtype),
+        "wk": L.dense_init(ks[3], di, di, dtype),
+        "wv": L.dense_init(ks[4], di, di, dtype),
+        "w_if": L.dense_init(ks[5], di, 2 * h, dtype),
+        "norm_h": jnp.ones((di,), jnp.float32),
+        "w_down": L.dense_init(ks[6], di, d, dtype),
+    }
+
+
+def mlstm_block_apply(p, cfg: ModelConfig, x, *, state=None, chunk=1024):
+    """x [b,l,d].  Returns (y, {'conv':..., 'mlstm': MLSTMState})."""
+    b, l, d = x.shape
+    di = 2 * d
+    h = cfg.n_heads
+    dh = di // h
+    xn = L.rmsnorm(x, p["norm"])
+    up = xn @ p["w_up"]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = ssm._causal_conv(x_in, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(b, l, h, dh)
+    k = (xc @ p["wk"]).reshape(b, l, h, dh)
+    v = (x_in @ p["wv"]).reshape(b, l, h, dh)
+    i_f = xc @ p["w_if"]
+    i_raw, f_raw = i_f[..., :h], i_f[..., h:]
+    prev = None if state is None else state["mlstm"]
+    hs, new_state = ssm.mlstm_chunkwise(q, k, v, i_raw, f_raw,
+                                        chunk=min(chunk, l), state=prev)
+    hs = hs.reshape(b, l, di)
+    y = L.rmsnorm(hs, p["norm_h"]) * jax.nn.silu(z.astype(jnp.float32))
+    y = y.astype(x.dtype) @ p["w_down"]
+    return x + y, {"conv": new_conv, "mlstm": new_state}
+
+
+def mlstm_block_step(p, cfg: ModelConfig, x, state):
+    """x [b,1,d] single-token decode."""
+    b, _, d = x.shape
+    di = 2 * d
+    h = cfg.n_heads
+    dh = di // h
+    xn = L.rmsnorm(x, p["norm"])
+    up = xn @ p["w_up"]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = ssm._causal_conv(x_in, p["conv_w"], state["conv"])
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(b, h, dh)
+    k = (xc @ p["wk"]).reshape(b, h, dh)
+    v = (x_in @ p["wv"]).reshape(b, h, dh)
+    i_f = (xc @ p["w_if"])[:, 0]
+    out, new_state = ssm.mlstm_step(q, k, v, i_f[:, :h], i_f[:, h:],
+                                    state["mlstm"])
+    hs = out.reshape(b, 1, di)
+    y = L.rmsnorm(hs, p["norm_h"]) * jax.nn.silu(z.astype(jnp.float32))
+    y = y.astype(x.dtype) @ p["w_down"]
+    return x + y, {"conv": new_conv, "mlstm": new_state}
+
+
+def mlstm_zero(cfg: ModelConfig, b: int):
+    di = 2 * cfg.d_model
+    h = cfg.n_heads
+    dh = di // h
+    return {"conv": jnp.zeros((b, D_CONV - 1, di), _dtype(cfg)),
+            "mlstm": ssm.mlstm_zero_state(b, h, dh, dh)}
+
+
+# ------------------------------------------------------------- sLSTM block
+
+
+def slstm_block_init(key, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    f = int(d * 4 / 3 / 64) * 64 or 64
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "w_gates": L.dense_init(ks[0], d, 4 * d, dtype),
+        "r_w": jax.random.normal(ks[1], (4, h, dh, dh), jnp.float32)
+        * (1.0 / dh) ** 0.5,
+        "norm_h": jnp.ones((d,), jnp.float32),
+        "w_proj": L.dense_init(ks[2], d, d, dtype),
+        "mlp": L.gelu_mlp_init(ks[3], d, f, dtype),
+        "norm2": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _slstm_gates(p, cfg, xn):
+    b, l, d = xn.shape
+    h = cfg.n_heads
+    dh = d // h
+    g = (xn @ p["w_gates"]).astype(jnp.float32)
+    return g.reshape(b, l, 4, h, dh)
+
+
+def slstm_block_apply(p, cfg: ModelConfig, x, *, state=None):
+    b, l, d = x.shape
+    xn = L.rmsnorm(x, p["norm"])
+    gates = _slstm_gates(p, cfg, xn)
+    st = state["slstm"] if state is not None else \
+        ssm.slstm_zero_state(b, cfg.n_heads, d // cfg.n_heads)
+    hs, new_state = ssm.slstm_apply(gates, p["r_w"], st)
+    hs = hs.reshape(b, l, d)
+    y = (L.rmsnorm(hs, p["norm_h"]).astype(x.dtype)) @ p["w_proj"]
+    x = x + y
+    x = x + L.gelu_mlp_apply(p["mlp"], L.rmsnorm(x, p["norm2"]))
+    return x, {"slstm": new_state}
+
+
+def slstm_block_step(p, cfg: ModelConfig, x, state):
+    b, _, d = x.shape
+    xn = L.rmsnorm(x, p["norm"])
+    gates = _slstm_gates(p, cfg, xn)[:, 0]
+    new_state, hh = ssm.slstm_cell(gates, p["r_w"], state["slstm"])
+    hs = hh.reshape(b, 1, d)
+    y = (L.rmsnorm(hs, p["norm_h"]).astype(x.dtype)) @ p["w_proj"]
+    x = x + y
+    x = x + L.gelu_mlp_apply(p["mlp"], L.rmsnorm(x, p["norm2"]))
+    return x, {"slstm": new_state}
+
+
+def slstm_zero(cfg: ModelConfig, b: int):
+    return {"slstm": ssm.slstm_zero_state(b, cfg.n_heads,
+                                          cfg.d_model // cfg.n_heads)}
+
+
+# ------------------------------------------------------------------- model
+
+
+def _pattern(cfg: ModelConfig) -> str:
+    return cfg.xlstm_pattern or "ms" * (cfg.n_layers // 2)
+
+
+def xlstm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    blocks = []
+    for i, ch in enumerate(_pattern(cfg)):
+        init = mlstm_block_init if ch == "m" else slstm_block_init
+        blocks.append(init(ks[i], cfg))
+    return {
+        "emb": L.embed_init(ks[-3], cfg.vocab, cfg.d_model, _dtype(cfg)),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": L.dense_init(ks[-2], cfg.d_model, cfg.vocab, _dtype(cfg)),
+    }
+
+
+def xlstm_forward(params, cfg: ModelConfig, tokens, *, states=None,
+                  collect_states=False, chunk=1024, remat=False):
+    h = params["emb"][tokens].astype(_dtype(cfg))
+    h = shard(h, "batch", None, None)
+    new_states = []
+    for i, ch in enumerate(_pattern(cfg)):
+        st = None if states is None else states[i]
+        if ch == "m":
+            fn = lambda p, hh, s: mlstm_block_apply(p, cfg, hh, state=s,
+                                                    chunk=chunk)
+        else:
+            fn = lambda p, hh, s: slstm_block_apply(p, cfg, hh, state=s)
+        if remat:  # per-block remat: only the block input survives to bwd
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=())
+        h, ns = fn(params["blocks"][i], h, st)
+        new_states.append(ns)
+    h = L.rmsnorm(h, params["final_norm"])
+    return h, (new_states if collect_states or states is not None else None)
+
+
+def xlstm_loss(params, cfg: ModelConfig, batch, *, remat=True, **_):
+    h, _ = xlstm_forward(params, cfg, batch["tokens"], remat=remat)
+    logits = _head(params, cfg, h)
+    loss = xent_loss(logits, batch["labels"])
+    return loss, {"loss": loss, "xent": loss, "aux": 0.0}
+
+
+def xlstm_prefill(params, cfg: ModelConfig, batch, **_):
+    h, states = xlstm_forward(params, cfg, batch["tokens"],
+                              collect_states=True)
+    return _head(params, cfg, h[:, -1]), states
+
+
+def xlstm_init_cache(cfg: ModelConfig, b: int, max_len: int):
+    del max_len  # constant-size state
+    return [mlstm_zero(cfg, b) if ch == "m" else slstm_zero(cfg, b)
+            for ch in _pattern(cfg)]
+
+
+def xlstm_decode_step(params, cfg: ModelConfig, states, tokens, kv_len, **_):
+    del kv_len  # recurrent state carries position implicitly
+    h = params["emb"][tokens].astype(_dtype(cfg))
+    new_states = []
+    for i, ch in enumerate(_pattern(cfg)):
+        step = mlstm_block_step if ch == "m" else slstm_block_step
+        h, ns = step(params["blocks"][i], cfg, h, states[i])
+        new_states.append(ns)
+    h = L.rmsnorm(h, params["final_norm"])
+    return _head(params, cfg, h[:, -1]), new_states

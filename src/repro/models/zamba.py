@@ -1,0 +1,198 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block applied
+every `attn_every` layers (arXiv:2411.15242).
+
+The shared block's parameters are a single set reused at each application;
+each application keeps its own KV cache.  For long_500k decode the KV caches
+of the few shared-attention applications are the only sequence-length state
+(sharded over 'seqs'); the Mamba2 state is O(1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.transformer import DTYPES, xent_loss, _head
+from repro.sharding import shard
+
+
+def _dtype(cfg):
+    return DTYPES[cfg.dtype]
+
+
+def _segments(cfg: ModelConfig):
+    """Split n_layers into segments; shared attention after each full one."""
+    k = cfg.attn_every or cfg.n_layers
+    bounds, i = [], 0
+    while i < cfg.n_layers:
+        j = min(i + k, cfg.n_layers)
+        bounds.append((i, j, j - i == k and j < cfg.n_layers + 1))
+        i = j
+    return bounds  # (start, end, apply_attn_after)
+
+
+def n_attn_applications(cfg: ModelConfig) -> int:
+    return sum(1 for (_, _, a) in _segments(cfg) if a)
+
+
+def _mamba_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "mamba": ssm.mamba2_init(k1, cfg.d_model, cfg.ssm, _dtype(cfg))}
+
+
+def zamba_init(key, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: _mamba_layer_init(k, cfg))(keys)
+    k1, k2 = jax.random.split(ks[1])
+    shared = {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+              "attn": A.gqa_init(k1, cfg, dtype),
+              "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+              "ffn": L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+    return {"emb": L.embed_init(ks[2], cfg.vocab, cfg.d_model, dtype),
+            "layers": layers, "shared": shared,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "head": L.dense_init(ks[3], cfg.d_model, cfg.vocab, dtype)}
+
+
+def _slice_stack(stack, a, b):
+    return jax.tree.map(lambda x: x[a:b], stack)
+
+
+def _shared_block(p, cfg, h, positions, *, return_cache=False, block_k=512):
+    hn = L.rmsnorm(h, p["norm1"])
+    a, kv = A.gqa_train(p["attn"], cfg, hn, positions,
+                        return_cache=return_cache, block_k=block_k)
+    h = h + a
+    hn = L.rmsnorm(h, p["norm2"])
+    h = h + L.swiglu_apply(p["ffn"], hn)
+    return shard(h, "batch", None, None), kv
+
+
+def zamba_forward(params, cfg: ModelConfig, tokens, *, remat=True,
+                  collect_caches=False, block_k=512):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = params["emb"][tokens].astype(_dtype(cfg))
+    h = shard(h, "batch", None, None)
+
+    def mamba_body(hh, lp):
+        hn = L.rmsnorm(hh, lp["norm"])
+        y, _ = ssm.mamba2_apply(lp["mamba"], cfg.ssm, cfg.d_model, hn)
+        return shard(hh + y, "batch", None, None), None
+
+    if remat:
+        mamba_body = jax.checkpoint(
+            mamba_body, policy=jax.checkpoint_policies.nothing_saveable)
+    kv_caches = []
+    for (a, bnd, apply_attn) in _segments(cfg):
+        h, _ = lax.scan(mamba_body, h, _slice_stack(params["layers"], a, bnd))
+        if apply_attn:
+            h, kv = _shared_block(params["shared"], cfg, h, positions,
+                                  return_cache=collect_caches,
+                                  block_k=block_k)
+            if collect_caches:
+                kv_caches.append(kv)
+    h = L.rmsnorm(h, params["final_norm"])
+    return h, kv_caches
+
+
+def zamba_loss(params, cfg: ModelConfig, batch, *, remat=True, block_k=512):
+    h, _ = zamba_forward(params, cfg, batch["tokens"], remat=remat,
+                         block_k=block_k)
+    logits = _head(params, cfg, h)
+    loss = xent_loss(logits, batch["labels"])
+    return loss, {"loss": loss, "xent": loss, "aux": 0.0}
+
+
+# ------------------------------------------------------------------ serving
+
+
+def zamba_init_cache(cfg: ModelConfig, b: int, max_len: int):
+    dt = _dtype(cfg)
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+    n_l = cfg.n_layers
+    mamba = {"conv": jnp.zeros((n_l, b, s.d_conv - 1, di + 2 * s.n_groups
+                                * s.d_state), dt),
+             "ssm": jnp.zeros((n_l, b, h, s.head_dim, s.d_state), jnp.float32)}
+    napp = n_attn_applications(cfg)
+    kv = (jnp.zeros((napp, b, cfg.n_kv_heads, max_len, cfg.hd), dt),
+          jnp.zeros((napp, b, cfg.n_kv_heads, max_len, cfg.hd), dt))
+    return {"mamba": mamba, "attn_kv": kv}
+
+
+def zamba_prefill(params, cfg: ModelConfig, batch, *, block_k=512):
+    """Prefill: run full-seq forward, collecting mamba states and attn KV."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = params["emb"][tokens].astype(_dtype(cfg))
+
+    def mamba_body(hh, lp):
+        hn = L.rmsnorm(hh, lp["norm"])
+        y, st = ssm.mamba2_apply(lp["mamba"], cfg.ssm, cfg.d_model, hn)
+        return hh + y, st
+
+    kv_list, conv_list, ssm_list = [], [], []
+    for (a, bnd, apply_attn) in _segments(cfg):
+        h, sts = lax.scan(mamba_body, h, _slice_stack(params["layers"], a, bnd))
+        conv_list.append(sts["conv"])
+        ssm_list.append(sts["ssm"])
+        if apply_attn:
+            h, kv = _shared_block(params["shared"], cfg, h, positions,
+                                  return_cache=True, block_k=block_k)
+            kv_list.append(kv)
+    h = L.rmsnorm(h, params["final_norm"])
+    cache = {"mamba": {"conv": jnp.concatenate(conv_list, 0),
+                       "ssm": jnp.concatenate(ssm_list, 0)},
+             "attn_kv": (jnp.stack([k for k, _ in kv_list], 0),
+                         jnp.stack([v for _, v in kv_list], 0))}
+    return _head(params, cfg, h[:, -1]), cache
+
+
+def zamba_decode_step(params, cfg: ModelConfig, cache, tokens, kv_len,
+                      *, block_k=2048):
+    b = tokens.shape[0]
+    h = params["emb"][tokens].astype(_dtype(cfg))
+    mamba, (kstack, vstack) = cache["mamba"], cache["attn_kv"]
+
+    def mamba_step(hh, xs):
+        lp, conv, ssm_st = xs
+        hn = L.rmsnorm(hh, lp["norm"])
+        y, st = ssm.mamba2_decode(lp["mamba"], cfg.ssm, cfg.d_model, hn,
+                                  {"conv": conv, "ssm": ssm_st})
+        return hh + y, st
+
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    app = 0
+    for (a, bnd, apply_attn) in _segments(cfg):
+        h, sts = lax.scan(
+            mamba_step, h,
+            (_slice_stack(params["layers"], a, bnd),
+             mamba["conv"][a:bnd], mamba["ssm"][a:bnd]))
+        new_conv.append(sts["conv"])
+        new_ssm.append(sts["ssm"])
+        if apply_attn:
+            p = params["shared"]
+            hn = L.rmsnorm(h, p["norm1"])
+            att, (nk, nv) = A.gqa_decode(p["attn"], cfg, hn,
+                                         (kstack[app], vstack[app]), kv_len,
+                                         block_k=block_k)
+            h = h + att
+            hn = L.rmsnorm(h, p["norm2"])
+            h = h + L.swiglu_apply(p["ffn"], hn)
+            new_k.append(nk)
+            new_v.append(nv)
+            app += 1
+    h = L.rmsnorm(h, params["final_norm"])
+    cache = {"mamba": {"conv": jnp.concatenate(new_conv, 0),
+                       "ssm": jnp.concatenate(new_ssm, 0)},
+             "attn_kv": (jnp.stack(new_k, 0), jnp.stack(new_v, 0))}
+    return _head(params, cfg, h[:, -1]), cache

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import make_optimizer, cosine_schedule  # noqa: F401

@@ -1,0 +1,147 @@
+"""Sharded optimizers: AdamW (f32 moments) and Adafactor (factored second
+moments — the memory-efficient choice for the 123B/671B train cells).
+
+Functional API (no optax dependency): make_optimizer returns
+(init_fn, update_fn); optimizer state inherits the parameter sharding, so
+ZeRO-style optimizer sharding falls out of the FSDP param specs for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int = 100,
+                    total: int = 10000, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.minimum(warm, 1.0) * cos
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), n
+
+
+# ----------------------------------------------------------------- AdamW
+
+
+def make_adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+               clip_norm=1.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m, "v": v, "step": step}, gnorm
+
+    return init, update
+
+
+# -------------------------------------------------------------- Adafactor
+
+
+def make_adafactor(lr_fn, eps=1e-30, clip_threshold=1.0, decay=0.8,
+                   weight_decay=0.0, clip_norm=1.0):
+    """Factored second moments for params with >= 2 dims (row/col stats);
+    O(rows+cols) optimizer memory instead of O(rows*cols)."""
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32)) ** -decay
+
+        def upd(g, f, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = beta * f["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * f["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                     eps))
+                cfac = jax.lax.rsqrt(vc)
+                u = gf * rfac[..., None] * cfac[..., None, :]
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v)
+                nf = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), nf
+
+        leaves = {"f": state["f"]}
+        out = jax.tree.map(upd, grads, leaves["f"], params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("vr" in x or "v" in x))
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        nf = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"f": nf, "step": step}, gnorm
+
+    return init, update
+
+
+def make_optimizer(name: str, lr: float = 3e-4, warmup: int = 100,
+                   total_steps: int = 10000, **kw):
+    lr_fn = cosine_schedule(lr, warmup, total_steps)
+    if name == "adamw":
+        return make_adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return make_adafactor(lr_fn, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,168 @@
+"""Analytic roofline model (EXPERIMENTS.md §Roofline).
+
+XLA:CPU's cost_analysis does not multiply through `while` trip counts, so a
+scan-over-layers program under-reports FLOPs/bytes by ~L x n_micro (verified
+in EXPERIMENTS.md §Dry-run).  The roofline terms are therefore derived
+*analytically* from the known sharding plan and per-arch operator counts —
+the same napkin math the §Perf loop uses — while the compiled HLO supplies
+structural evidence (which collectives exist in each loop body, per-device
+buffer sizes).
+
+All terms are per-device-per-step seconds on TPU v5e-class constants.
+
+Sharding plan assumed (baseline; knobs mirror the hillclimb changes):
+  batch over ('pod','data'); params FSDP over 'data' + TP over 'model';
+  train remat = full (3 weight passes: fwd, recompute, bwd);
+  MoE: experts over 'model' (EP), sort-based dispatch (all-to-all);
+  decode: TP all-reduce per layer, KV cache local to its shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeCfg
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+B2 = 2  # bf16 bytes
+
+
+@dataclasses.dataclass
+class Plan:
+    dp: int = 16            # data-parallel ways (x pod for multi)
+    tp: int = 16
+    pods: int = 1
+    remat_passes: int = 3   # fwd + recompute + bwd weight passes (full remat)
+    fsdp: bool = True
+    moe_a2a_factor: float = 8.0   # dispatch+combine, fwd+bwd, ring 2x
+    tp_collectives_train: int = 6 # ar per layer (2 fwd, 2 bwd, 2 recompute)
+    tp_collectives_inf: int = 2
+    gather_weights_decode: bool = True  # FSDP gather on every decode step
+    sp: bool = False        # sequence parallel: AR -> RS+AG (half the bytes)
+
+    @property
+    def ring(self) -> float:
+        return 1.0 if self.sp else 2.0
+
+    @property
+    def n_dev(self):
+        return self.dp * self.tp * self.pods
+
+    @property
+    def dp_total(self):
+        return self.dp * self.pods
+
+
+# §Perf hillclimb plan variants (EXPERIMENTS.md)
+PLANS = {
+    "baseline": Plan(),
+    "sp": Plan(sp=True),
+    "sp_dots": Plan(sp=True, remat_passes=2, tp_collectives_train=4),
+    "sp_dots_mb64": Plan(sp=True, remat_passes=2, tp_collectives_train=4),
+    "grp": Plan(moe_a2a_factor=4.0),
+    "grp_sp_dots": Plan(sp=True, remat_passes=2, tp_collectives_train=4,
+                        moe_a2a_factor=4.0),
+    "serve_replicated": Plan(gather_weights_decode=False),
+}
+
+
+def _attn_flops(cfg: ModelConfig, tokens: float, ctx: float, mult: float):
+    """2*2*H*hd per (token, ctx) MAC pair; causal halves train/prefill."""
+    if cfg.family == "ssm_xlstm":
+        return 0.0
+    L = cfg.n_layers if cfg.family != "hybrid" else max(
+        1, cfg.n_layers // max(cfg.attn_every, 1))
+    h = cfg.n_heads
+    hd = (cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+          if cfg.mla else cfg.hd)
+    return mult * 2 * tokens * ctx * h * hd * L
+
+
+def roofline(cfg: ModelConfig, shape: ShapeCfg, plan: Plan) -> dict:
+    gb, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    n_dev = plan.n_dev
+    P = cfg.param_count()
+    Pa = cfg.active_param_count()
+    d = cfg.d_model
+    L = cfg.n_layers + cfg.enc_layers
+    n_micro = (gb // cfg.microbatch if (kind == "train" and cfg.microbatch)
+               else 1)
+
+    if kind == "train":
+        tokens = gb * S
+        flop_mult, ctx, attn_mult = 6, S / 2, 3  # fwd+bwd
+    elif kind == "prefill":
+        tokens = gb * S
+        flop_mult, ctx, attn_mult = 2, S / 2, 1
+    else:
+        tokens = gb
+        flop_mult, ctx, attn_mult = 2, S, 1
+
+    tokens_local = tokens / plan.dp_total
+    useful = flop_mult * Pa * tokens + _attn_flops(cfg, tokens, ctx, attn_mult)
+    t_compute = useful / n_dev / PEAK
+
+    # ---- HBM traffic per device ----
+    if kind == "train":
+        # weights: every pass materializes + reads the full TP shard of each
+        # layer (FSDP all-gathered); optimizer touches the local shard.
+        w_bytes = plan.remat_passes * n_micro * (Pa * B2) / plan.tp
+        opt_bytes = (P / n_dev) * (2 + 4 + 4 + 4 + 2)
+        act_bytes = tokens_local * d * L * B2 * 10  # fwd+bwd+recompute r/w
+        mem = w_bytes + opt_bytes + act_bytes
+    elif kind == "prefill":
+        mem = (Pa * B2) / plan.tp + tokens_local * d * L * B2 * 4
+        # blockwise attention re-streams KV once per layer
+        mem += tokens_local * (cfg.n_kv_heads * cfg.hd if not cfg.mla
+                               else 576) * L * B2 * 2
+    else:
+        w = (Pa * B2) / plan.tp
+        if plan.gather_weights_decode and plan.fsdp:
+            w = (Pa * B2) / plan.tp  # gathered then read once
+        kv_dim = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                  if cfg.mla else 2 * cfg.n_kv_heads * cfg.hd)
+        if cfg.family == "ssm_xlstm":
+            kv_bytes = 0.0
+        elif cfg.family == "hybrid":
+            napp = max(1, cfg.n_layers // max(cfg.attn_every, 1))
+            kv_bytes = gb * S * 2 * cfg.n_kv_heads * cfg.hd * napp * B2 / n_dev
+        else:
+            kv_bytes = gb * S * kv_dim * L * B2 / n_dev
+        mem = w + kv_bytes + tokens_local * d * L * B2 * 4
+    t_memory = mem / HBM
+
+    # ---- collective traffic per device ----
+    coll = 0.0
+    act_tok = tokens_local * d * B2
+    n_tp_layers = L
+    if kind == "train":
+        coll += plan.tp_collectives_train * n_tp_layers * act_tok \
+            * plan.ring
+        if plan.fsdp:
+            coll += plan.remat_passes * n_micro * (Pa * B2) / plan.tp  # AG
+            coll += (P * B2) / plan.tp                                 # RS grads
+        if plan.pods > 1:
+            coll += 2 * (P * B2) / (plan.dp * plan.tp)  # cross-pod grad AR
+        if cfg.moe is not None:
+            coll += plan.moe_a2a_factor * tokens_local * d * B2
+    else:
+        coll += plan.tp_collectives_inf * n_tp_layers * act_tok * plan.ring
+        if cfg.moe is not None:
+            coll += 4 * tokens_local * d * B2
+        if kind == "decode" and plan.gather_weights_decode and plan.fsdp:
+            coll += (Pa * B2) / plan.tp
+    t_coll = coll / LINK
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    t_bound = max(terms.values()) or 1e-30
+    return {
+        "arch": cfg.name, "shape": shape.name,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bound": bound,
+        "useful_flops": useful, "mem_bytes_dev": mem, "coll_bytes_dev": coll,
+        "roofline_frac": t_compute / t_bound,
+        "n_micro": n_micro,
+    }

@@ -1,0 +1,40 @@
+"""Elastic rescale: rebuild a mesh from whatever devices survive and restore
+a checkpoint onto it.
+
+The checkpoint format is sharding-agnostic (full logical arrays), so a
+restore onto a different (data, model) grid is just device_put with the new
+shardings — `reshard_restore` below.  Policy: keep the model axis as large
+as the layout allows (TP must divide head/ffn dims), give the rest to data."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.runtime import checkpoint as CK
+from repro.sharding import param_shardings
+
+
+def choose_mesh(n_devices: Optional[int] = None, *, model_divisors=(16, 8, 4, 2, 1),
+                max_model: int = 16) -> Mesh:
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    model = 1
+    for m in model_divisors:
+        if m <= max_model and n % m == 0:
+            model = m
+            break
+    data = n // model
+    return Mesh(np.asarray(devs[:n]).reshape(data, model), ("data", "model"))
+
+
+def reshard_restore(ckpt_path: str, like_state, mesh: Mesh):
+    """Restore a checkpoint onto `mesh`, resharding every leaf."""
+    with mesh:
+        sh = {"params": param_shardings(like_state["params"], mesh),
+              "opt": param_shardings(like_state["opt"], mesh)}
+        step, state = CK.restore_checkpoint(ckpt_path, like_state,
+                                            shardings=sh)
+    return step, state

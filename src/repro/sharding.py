@@ -1,0 +1,190 @@
+"""Logical-axis sharding: one naming scheme resolved against whichever mesh
+is active (single-pod ('data','model') or multi-pod ('pod','data','model')).
+
+Models annotate activations with `shard(x, 'batch', None, 'tp')` and param
+trees get PartitionSpecs from `param_specs` (path-based rules).  Outside a
+mesh context everything is a no-op, so the same model code runs in CPU smoke
+tests, the 512-device dry-run, and a real cluster unchanged.
+
+Logical axes:
+    batch   — data-parallel batch dim: ('data',) or ('pod','data')
+    fsdp    — ZeRO-3 parameter/optimizer sharding dim: ('data',)
+    tp      — tensor-parallel dim (heads / ffn / vocab): ('model',)
+    expert  — expert-parallel dim for MoE banks: ('model',)
+    seqs    — sequence sharding for long-context KV caches: ('data',)
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: dict = {"mesh": None, "rules": None}
+
+
+def make_rules(mesh: Mesh, *, fsdp_over_pod: bool = False) -> dict:
+    has_pod = "pod" in mesh.axis_names
+    return {
+        "batch": ("pod", "data") if has_pod else ("data",),
+        "fsdp": (("pod", "data") if (has_pod and fsdp_over_pod) else ("data",)),
+        "tp": ("model",),
+        "sp": ("model",),   # sequence parallelism shares the TP axis
+        "expert": ("model",),
+        "seqs": ("data",),
+        None: None,
+    }
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    global _ACTIVE
+    prev = dict(_ACTIVE)
+    _ACTIVE = {"mesh": mesh, "rules": rules or (make_rules(mesh) if mesh else None)}
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _ACTIVE = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def resolve(*logical) -> P:
+    rules = _ACTIVE["rules"] or {}
+    out = []
+    for name in logical:
+        ax = rules.get(name) if name is not None else None
+        if ax is None:
+            out.append(None)
+        elif len(ax) == 1:
+            out.append(ax[0])
+        else:
+            out.append(tuple(ax))
+    return P(*out)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in names:
+        n *= sizes[a]
+    return n
+
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh extent does not divide the dim (e.g.
+    vocab 49155 on a 16-way axis, 40 heads on 16-way TP) and truncate to
+    the value's rank — models stay mesh-agnostic."""
+    out = []
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, entry in zip(shape, entries):
+        n = _axis_size(mesh, entry)
+        out.append(entry if (n > 1 and dim % n == 0) or n == 1 else None)
+    return P(*out)
+
+
+def shard(x: jnp.ndarray, *logical) -> jnp.ndarray:
+    """Constrain activation sharding (no-op without an active mesh)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    spec = sanitize(resolve(*logical[:x.ndim]), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# parameter sharding rules (path-based)
+# --------------------------------------------------------------------------
+
+# (regex on '/'-joined param path, logical spec per trailing dims).
+# Leading stacked-layer dims (from scan-over-layers) are padded with None.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"(emb|tok_emb)$",            ("tp", "fsdp")),       # [V, d] vocab-parallel
+    (r"(head|lm_head|mtp_head)$",  ("fsdp", "tp")),       # [d, V]
+    (r"patch_proj$",               ("fsdp", "tp")),
+    (r"(wq|wkv|wk|wv|in_proj|w_qkv)$", ("fsdp", "tp")),
+    (r"(wq_a|wkv_a)$",             ("fsdp", None)),       # MLA down-proj (small)
+    (r"(wq_b|wkv_b)$",             (None, "tp")),         # MLA up-proj
+    (r"wo$",                       ("tp", "fsdp")),
+    (r"(w1|w3|wi)$",               ("fsdp", "tp")),
+    (r"(w2|wo_mlp)$",              ("tp", "fsdp")),
+    (r"experts_w[13]$",            ("expert", "fsdp", None)),  # [E, d, f]
+    (r"experts_w2$",               ("expert", None, "fsdp")),  # [E, f, d]
+    (r"router$",                   ("fsdp", None)),
+    (r"(xproj|zproj|bcdt_proj|out_proj)$", ("fsdp", "tp")),
+    (r"conv_w$",                   (None, None, "tp")),
+    (r"(bias|scale|norm\w*|gamma|beta|a_log|dt_bias|d_skip)$", None),
+]
+
+
+def spec_for(path: str, ndim: int) -> P:
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            if logical is None or ndim < len(logical):
+                return P()
+            # pad leading stacked-layer dims with None
+            names = (None,) * (ndim - len(logical)) + logical
+            return resolve(*names)
+    return P()  # replicate by default (biases, scalars)
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out.append((path, leaf))
+    return out, treedef
+
+
+def param_specs(params_like: Any, mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec tree for a (possibly abstract) param tree; specs are
+    sanitized against `mesh` (or the active mesh) for divisibility."""
+    mesh = mesh or active_mesh()
+    flat, treedef = _flatten_with_paths(params_like)
+    specs = []
+    for path, leaf in flat:
+        s = spec_for(path, getattr(leaf, "ndim", 0))
+        if mesh is not None:
+            s = sanitize(s, getattr(leaf, "shape", ()), mesh)
+        specs.append(s)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def drop_axes(spec_tree: Any, axes=("data",)) -> Any:
+    """Remove the given mesh axes from every PartitionSpec (e.g. serve-mode
+    param layout: replicate over 'data', keep TP) — §Perf decode hillclimb."""
+    def fix_entry(e):
+        if e is None:
+            return None
+        if isinstance(e, tuple):
+            kept = tuple(a for a in e if a not in axes)
+            return kept if len(kept) > 1 else (kept[0] if kept else None)
+        return None if e in axes else e
+
+    def fix(s):
+        return P(*(fix_entry(e) for e in s))
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def param_shardings(params_like: Any, mesh: Optional[Mesh] = None) -> Any:
+    mesh = mesh or active_mesh()
+    specs = param_specs(params_like)
+    if mesh is None:
+        return specs
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

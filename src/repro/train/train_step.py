@@ -1,0 +1,65 @@
+"""Train step: value_and_grad + microbatch gradient accumulation + optimizer.
+
+Microbatching reshapes [GB, ...] -> [n_micro, MB, ...] and lax.scans the
+forward/backward, accumulating f32 gradients — this is what bounds
+activation memory for the 123B/671B train_4k cells (the accumulation loop
+is the standard distributed-optimization trick; remat happens inside the
+model's layer scan)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.registry import Model
+from repro.optim.optimizers import apply_updates
+from repro.sharding import shard
+
+
+def _split_micro(batch, n_micro):
+    def f(x):
+        gb = x.shape[0]
+        assert gb % n_micro == 0, (gb, n_micro)
+        return x.reshape(n_micro, gb // n_micro, *x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(model: Model, opt_init, opt_update,
+                    n_micro: Optional[int] = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Pure; jit/pjit it with the desired shardings."""
+
+    def loss_fn(params, micro_batch):
+        loss, metrics = model.loss(params, micro_batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if n_micro and n_micro > 1:
+            micro = _split_micro(batch, n_micro)
+
+            def accum(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                    g_acc, grads)
+                return (g_acc, loss_acc + loss / n_micro), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = lax.scan(accum, (g0, jnp.float32(0.0)), micro)
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        updates, opt_state, gnorm = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        out_metrics = {"loss": metrics.get("loss", 0.0), "gnorm": gnorm}
+        return params, opt_state, out_metrics
+
+    return train_step

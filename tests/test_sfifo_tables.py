@@ -1,0 +1,122 @@
+"""Unit + hypothesis property tests for the sFIFO / LR-TBL / PA-TBL
+hardware structures (paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sfifo, tables
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_push_pos_monotone():
+    f = sfifo.make(4)
+    f, ev, p0 = sfifo.push(f, 1)
+    f, ev, p1 = sfifo.push(f, 2, force_tail=True)
+    assert int(p1) > int(p0)
+    assert int(ev) == -1
+
+
+def test_write_combining_no_duplicate():
+    f = sfifo.make(4)
+    f, _, _ = sfifo.push(f, 7)
+    f, _, _ = sfifo.push(f, 7)
+    assert int(sfifo.size(f)) == 1
+
+
+def test_release_moves_to_tail():
+    f = sfifo.make(4)
+    f, _, _ = sfifo.push(f, 1)
+    f, _, _ = sfifo.push(f, 2)
+    f, _, pos = sfifo.push(f, 1, force_tail=True)  # re-release block 1
+    f, drained, count = sfifo.drain_upto(f, pos)
+    d = np.asarray(drained)
+    assert int(count) == 2
+    # FIFO order: 2 (older) then 1 (moved to tail)
+    assert list(d[:2]) == [2, 1]
+
+
+def test_capacity_eviction_returns_oldest():
+    f = sfifo.make(2)
+    f, _, _ = sfifo.push(f, 1)
+    f, _, _ = sfifo.push(f, 2)
+    f, ev, _ = sfifo.push(f, 3)
+    assert int(ev) == 1  # oldest written back
+
+
+def test_drain_upto_prefix_only():
+    f = sfifo.make(8)
+    poss = []
+    for a in [10, 11, 12, 13]:
+        f, _, p = sfifo.push(f, a)
+        poss.append(p)
+    f, drained, count = sfifo.drain_upto(f, poss[1])
+    assert int(count) == 2
+    assert list(np.asarray(drained)[:2]) == [10, 11]
+    assert int(sfifo.size(f)) == 2
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 15), st.booleans()), max_size=40))
+def test_fifo_matches_python_model(ops):
+    """Random pushes (w/ and w/o force_tail) then drain_all == python deque."""
+    cap = 6
+    f = sfifo.make(cap)
+    model = []  # list of addrs in FIFO order
+    for addr, force in ops:
+        if addr in model:
+            if force:
+                model.remove(addr)
+                model.append(addr)
+        else:
+            if len(model) == cap:
+                model.pop(0)
+            model.append(addr)
+        f, _, _ = sfifo.push(f, addr, force_tail=force)
+    f, drained, count = sfifo.drain_all(f)
+    got = [int(x) for x in np.asarray(drained)[:int(count)]]
+    assert got == model
+
+
+def test_lr_insert_lookup_update():
+    t = tables.lr_make(4)
+    t, ea, ep = tables.lr_insert(t, 5, 100)
+    assert int(tables.lr_lookup(t, 5)) == 100
+    t, _, _ = tables.lr_insert(t, 5, 200)  # update in place
+    assert int(tables.lr_lookup(t, 5)) == 200
+    assert int(tables.lr_lookup(t, 6)) == -1
+
+
+def test_lr_eviction_returns_victim():
+    t = tables.lr_make(2)
+    t, _, _ = tables.lr_insert(t, 1, 10)
+    t, _, _ = tables.lr_insert(t, 2, 20)
+    t, ea, ep = tables.lr_insert(t, 3, 30)
+    assert (int(ea), int(ep)) == (1, 10)  # FIFO eviction
+    assert int(tables.lr_lookup(t, 3)) == 30
+
+
+def test_pa_overflow_sets_promote_all():
+    t = tables.pa_make(2)
+    t = tables.pa_insert(t, 1)
+    t = tables.pa_insert(t, 2)
+    assert not bool(t.promote_all)
+    t = tables.pa_insert(t, 3)
+    assert bool(t.promote_all)
+    assert bool(tables.pa_contains(t, 99))  # everything promotes now
+    t = tables.pa_clear(t)
+    assert not bool(tables.pa_contains(t, 1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 9), max_size=20))
+def test_pa_contains_is_sound(addrs):
+    """pa_contains never returns False for an inserted address (conservative
+    overflow semantics — required for memory-model soundness)."""
+    t = tables.pa_make(4)
+    for a in addrs:
+        t = tables.pa_insert(t, a)
+    for a in addrs:
+        assert bool(tables.pa_contains(t, a))

@@ -1,0 +1,68 @@
+"""Work-stealing harness tests: the five paper scenarios end-to-end on small
+graphs — protocol integrity (every chunk processed exactly once THROUGH the
+simulated memory), solution correctness, and the paper's qualitative
+ordering (sRSP >= RSP, both beat global-sync baselines).
+
+Scenario sims are compiled once per module (fixture) and caches cleared
+afterwards — the compiled round loops are large."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.worksteal import WSConfig, run_app, reference_solution
+from repro.data.graphs import collab_like, road_like
+
+WS = WSConfig(n_wgs=4, chunk_cap=32, n_chunks_max=16)
+G = collab_like(n=384, m=3, seed=1)
+SCENARIOS = ["baseline", "scope_only", "steal_only", "rsp", "srsp"]
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {s: run_app("pagerank", G, s, WS, max_iters=2) for s in SCENARIOS}
+    yield out
+    jax.clear_caches()
+
+
+def test_every_chunk_processed_exactly_once(results):
+    for s, r in results.items():
+        assert r.proc_errors == 0, (s, r.proc_errors)
+
+
+def test_pagerank_solution_matches_reference(results):
+    ref = reference_solution("pagerank", G, max_iters=2)
+    for s in ("baseline", "srsp", "rsp"):
+        np.testing.assert_allclose(results[s].solution, ref, rtol=1e-5)
+
+
+def test_paper_ordering_holds(results):
+    base = results["baseline"].makespan
+    assert results["steal_only"].makespan < base          # balance helps
+    assert results["srsp"].makespan <= results["rsp"].makespan  # the claim
+    assert results["srsp"].counters["inv_full"] < \
+        results["rsp"].counters["inv_full"]
+    assert results["srsp"].counters["l2_accesses"] <= \
+        results["rsp"].counters["l2_accesses"]            # Fig. 5
+
+
+def test_stealing_actually_happens(results):
+    assert results["srsp"].counters["steals"] > 0
+
+
+def test_srsp_beats_global_sync_scenarios(results):
+    assert results["srsp"].makespan < results["baseline"].makespan
+    assert results["srsp"].makespan < results["steal_only"].makespan
+
+
+def test_sssp_and_mis_on_srsp():
+    g = road_like(n=400, seed=3)
+    ws = WSConfig(n_wgs=4, chunk_cap=32, n_chunks_max=16)
+    ref = reference_solution("sssp", g, max_iters=6)
+    r = run_app("sssp", g, "srsp", ws, max_iters=6)
+    assert r.proc_errors == 0
+    np.testing.assert_array_equal(r.solution, ref)
+    ref_m = reference_solution("mis", G, max_iters=4)
+    rm = run_app("mis", G, "srsp", WS, max_iters=4)
+    assert rm.proc_errors == 0
+    np.testing.assert_array_equal(rm.solution, ref_m)
+    jax.clear_caches()
