@@ -1,0 +1,26 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-slow test-all bench bench-full
+
+# Tier-1: fast suite (slow-marked full-size sims excluded via pyproject addopts)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Only the slow full-size simulator tests
+test-slow:
+	$(PYTHON) -m pytest -q -m slow
+
+# Everything
+test-all:
+	$(PYTHON) -m pytest -q -m ""
+
+# Protocol-engine benchmark -> BENCH_protocol_engine.json
+# (pagerank, srsp+rsp, n_wgs in {16,64,256}, serial vs batched engine)
+bench:
+	$(PYTHON) benchmarks/protocol_engine_bench.py --out BENCH_protocol_engine.json
+
+# Full sweep incl. extra apps/scenarios; see --help for knobs
+bench-full:
+	$(PYTHON) benchmarks/protocol_engine_bench.py --apps pagerank sssp \
+	  --scenarios baseline steal_only rsp srsp --out BENCH_protocol_engine.json

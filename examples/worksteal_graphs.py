@@ -21,6 +21,11 @@ def main():
     ap.add_argument("--wgs", type=int, default=16)
     ap.add_argument("--nodes", type=int, default=2048)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "serial"],
+                    help="vectorized scheduler (default) or the serial "
+                         "reference engine (identical counters, see "
+                         "DESIGN.md §4)")
     args = ap.parse_args()
 
     g = {"pagerank": collab_like, "sssp": road_like,
@@ -33,7 +38,8 @@ def main():
     print(f"{'scenario':12s} {'makespan':>12s} {'speedup':>8s} {'L2 acc':>9s} "
           f"{'steals':>7s} {'inv':>6s} {'sol ok':>7s}")
     for scen in SCENARIOS:
-        r = run_app(args.app, g, scen, ws, max_iters=args.iters)
+        r = run_app(args.app, g, scen, ws, max_iters=args.iters,
+                    engine=args.engine)
         ok = r.proc_errors == 0
         if args.app == "pagerank":
             ok = ok and np.allclose(r.solution, ref, rtol=1e-4)

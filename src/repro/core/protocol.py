@@ -1,22 +1,41 @@
 """Functional model of the sRSP / RSP scoped-synchronization protocols (paper §2–4).
 
-The memory system is modeled at word granularity over a shared L2 (the
-global synchronization point) and N private L1 caches, exactly the
-write-combining, no-allocate hierarchy of the paper's Table 1:
+The memory system is modeled at *block granularity* over a shared L2 (the
+global synchronization point) and N private L1 caches, the write-combining,
+no-allocate hierarchy of the paper's Table 1.  The layout is block-major
+(DESIGN.md §1): every array is shaped so that one cache block is one
+contiguous row, which turns the flush machinery into single gather/scatter
+ops instead of per-word dynamic slices:
 
-    Store.l2      [n_words]            word values at the L2 sync point
-    Store.l1      [n_caches, n_words]  per-cache cached word values
-    Store.wvalid  [n_caches, n_words]  local copy is readable
-    Store.wdirty  [n_caches, n_words]  local copy not yet written back
+    Store.l2      [n_blocks, block_words]            word values at L2
+    Store.l1      [n_caches, n_blocks, block_words]  per-cache cached values
+    Store.wvalid  [n_caches, n_blocks, block_words]  local copy is readable
+    Store.wdirty  [n_caches, n_blocks, block_words]  local copy not written back
     Store.fifo    batched SFifo        dirty-block FIFO  (QuickRelease)
     Store.lr      batched LRTbl        sRSP local-release table
     Store.pa      batched PATbl        sRSP promoted-acquire table
+
+A flat word address `addr` maps to (addr // block_words, addr % block_words).
 
 All operations are pure `(store, ...) -> (store', ...)` functions and fully
 jittable; the cost model charges cycles/L2-transactions as a side channel in
 `store.counters`.  Stale data is *really modeled*: an L1 may hold an old
 copy of a word while L2 has moved on — a protocol bug shows up as a wrong
 value read by a work-stealer, which the integration tests catch end-to-end.
+
+Two API layers (DESIGN.md §3):
+
+  * the classic single-cache ops (`load`, `store_word`, `local_acquire`, …)
+    take a scalar `cid` and are what the protocol tests and the serial
+    work-steal engine use;
+  * the batched multi-cache ops (`b_load`, `b_store_word`,
+    `local_acquire_b`, …) take an `active [n_caches]` mask plus per-cache
+    operand vectors and execute one op *per cache* in a single set of array
+    ops.  They are only semantics-preserving when the active caches touch
+    pairwise-disjoint L2 words (the batched scheduler in worksteal.py
+    guarantees this); cross-cache writeback merges resolve block-level
+    false sharing deterministically (highest cache id wins per word, which
+    matches the serial engine's ascending-j drain order).
 
 Invariant maintained (checked by property tests): every dirty word's block
 is present in that cache's sFIFO, so a FIFO drain is a complete flush.
@@ -33,8 +52,10 @@ from jax import lax
 
 from repro.core import sfifo, tables
 from repro.core.costmodel import CostParams, Counters, make_counters
+from repro.kernels.selective_flush.ops import drain_writeback
 
 INVALID = jnp.int32(-1)
+_DRAIN_ALL = jnp.int32(2**30)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,10 +74,10 @@ class ProtoConfig:
 
 
 class Store(NamedTuple):
-    l2: jnp.ndarray
-    l1: jnp.ndarray
-    wvalid: jnp.ndarray
-    wdirty: jnp.ndarray
+    l2: jnp.ndarray        # [n_blocks, W]
+    l1: jnp.ndarray        # [n_caches, n_blocks, W]
+    wvalid: jnp.ndarray    # [n_caches, n_blocks, W]
+    wdirty: jnp.ndarray    # [n_caches, n_blocks, W]
     fifo: sfifo.SFifo      # leaves have leading [n_caches]
     lr: tables.LRTbl
     pa: tables.PATbl
@@ -64,13 +85,13 @@ class Store(NamedTuple):
 
 
 def make_store(cfg: ProtoConfig) -> Store:
-    n, w = cfg.n_caches, cfg.n_words
+    n, nb, w = cfg.n_caches, cfg.n_blocks, cfg.block_words
     stack = lambda t: jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), t)
     return Store(
-        l2=jnp.zeros((w,), jnp.int32),
-        l1=jnp.zeros((n, w), jnp.int32),
-        wvalid=jnp.zeros((n, w), bool),
-        wdirty=jnp.zeros((n, w), bool),
+        l2=jnp.zeros((nb, w), jnp.int32),
+        l1=jnp.zeros((n, nb, w), jnp.int32),
+        wvalid=jnp.zeros((n, nb, w), bool),
+        wdirty=jnp.zeros((n, nb, w), bool),
         fifo=stack(sfifo.make(cfg.fifo_cap)),
         lr=stack(tables.lr_make(cfg.lr_cap)),
         pa=stack(tables.pa_make(cfg.pa_cap)),
@@ -95,12 +116,117 @@ def _mask_tree(pred, new, old):
     return jax.tree.map(lambda n, o: jnp.where(pred, n, o), new, old)
 
 
+def _mask_tree_rows(pred, new, old):
+    """Per-cache select: pred [n_caches], leaves have leading [n_caches]."""
+    def sel(n, o):
+        p = pred.reshape(pred.shape + (1,) * (n.ndim - 1))
+        return jnp.where(p, n, o)
+    return jax.tree.map(sel, new, old)
+
+
 def _blk(cfg: ProtoConfig, addr):
     return addr // cfg.block_words
 
 
+def _split(cfg: ProtoConfig, addr):
+    addr = jnp.asarray(addr, jnp.int32)
+    return addr // cfg.block_words, addr % cfg.block_words
+
+
+def _one_hot(cfg: ProtoConfig, cid):
+    return jnp.arange(cfg.n_caches, dtype=jnp.int32) == jnp.asarray(cid, jnp.int32)
+
+
+def _fill(cfg: ProtoConfig, val):
+    return jnp.full((cfg.n_caches,), val, jnp.int32)
+
+
 # --------------------------------------------------------------------------
-# block writeback and FIFO drains  (önbellek-temizleme machinery, §2.2)
+# batched block writeback / drain core  (önbellek-temizleme machinery, §2.2)
+# --------------------------------------------------------------------------
+
+def b_writeback(cfg: ProtoConfig, st: Store, blks, guard) -> Tuple[Store, jnp.ndarray]:
+    """Write back one block per cache: cache i flushes the dirty words of
+    block `blks[i]` (skip where guard[i] is False or blks[i] < 0).
+
+    Cross-cache collisions on the same block merge per word, highest cache
+    id winning (matches the serial ascending-j order; see module docstring).
+    Returns (store', did [n_caches] f32 — 1.0 where any word moved)."""
+    n, nb, W = cfg.n_caches, cfg.n_blocks, cfg.block_words
+    blks = jnp.asarray(blks, jnp.int32)
+    g = jnp.asarray(guard, bool) & (blks >= 0)
+    safe = jnp.clip(blks, 0)
+    rows = st.l1[jnp.arange(n), safe]                       # [n, W]
+    dirty_rows = st.wdirty[jnp.arange(n), safe]             # [n, W]
+    sel = dirty_rows & g[:, None]
+    idx = jnp.where(g, safe, nb)
+    l2 = drain_writeback(st.l2, rows, sel, idx)
+    wdirty = st.wdirty.at[jnp.arange(n), idx].set(
+        dirty_rows & ~sel, mode="drop")
+    did = jnp.any(sel, axis=1).astype(jnp.float32)
+    tot = jnp.sum(did)
+    c = st.counters
+    c = c._replace(l2_accesses=c.l2_accesses + tot, wb_blocks=c.wb_blocks + tot)
+    return st._replace(l2=l2, wdirty=wdirty, counters=c), did
+
+
+def b_drain(cfg: ProtoConfig, st: Store, pos, charge) -> Tuple[Store, jnp.ndarray]:
+    """Selective flush, all caches at once: cache i drains its sFIFO up to
+    seq `pos[i]` (§4.2 step 3; pos<0 drains nothing, big pos drains all) and
+    writes every drained block back to L2 in one masked scatter.
+
+    `charge[i]` mirrors the serial engine's per-call accounting: a charged
+    cache pays l2_lat + n_wb*wb_per_block even when it drained nothing.
+    Returns (store', n_wb [n_caches] f32)."""
+    n, nb, W = cfg.n_caches, cfg.n_blocks, cfg.block_words
+    pos = jnp.asarray(pos, jnp.int32)
+    f2, drained, _ = jax.vmap(sfifo.drain_upto)(st.fifo, pos)   # drained [n, cap]
+    st = st._replace(fifo=f2)
+    cap = drained.shape[1]
+    g = drained >= 0
+    safe = jnp.clip(drained, 0)
+    crow = jnp.broadcast_to(jnp.arange(n)[:, None], (n, cap))
+    rows = st.l1[crow, safe]                                    # [n, cap, W]
+    dirty_rows = st.wdirty[crow, safe] & g[..., None]
+    idx = jnp.where(g, drained, nb)
+    # cache-major flatten: later caches override earlier on (racy) collisions
+    l2 = drain_writeback(st.l2, rows.reshape(n * cap, W),
+                         dirty_rows.reshape(n * cap, W),
+                         idx.reshape(n * cap))
+    wdirty = st.wdirty.at[crow, idx].set(
+        st.wdirty[crow, safe] & ~dirty_rows, mode="drop")
+    did = jnp.any(dirty_rows, axis=-1)                          # [n, cap]
+    n_wb = jnp.sum(did, axis=1).astype(jnp.float32)
+    tot = jnp.sum(n_wb)
+    p = cfg.params
+    charge = jnp.asarray(charge, bool)
+    cyc = jnp.where(charge, p.l2_lat + n_wb * p.wb_per_block, 0.0)
+    c = st.counters
+    c = c._replace(cycles=c.cycles + cyc,
+                   l2_accesses=c.l2_accesses + tot,
+                   wb_blocks=c.wb_blocks + tot)
+    return st._replace(l2=l2, wdirty=wdirty, counters=c), n_wb
+
+
+def b_invalidate(cfg: ProtoConfig, st: Store, mask) -> Store:
+    """Whole-cache invalidate of every cache in `mask`: flush dirty first
+    (§2.2), flash-invalidate, clear LR-TBL and PA-TBL (§4.4)."""
+    mask = jnp.asarray(mask, bool)
+    st, _ = b_drain(cfg, st, jnp.where(mask, _DRAIN_ALL, INVALID), mask)
+    wvalid = jnp.where(mask[:, None, None], False, st.wvalid)
+    lr = _mask_tree_rows(mask, jax.vmap(tables.lr_clear)(st.lr), st.lr)
+    pa = _mask_tree_rows(mask, jax.vmap(tables.pa_clear)(st.pa), st.pa)
+    p = cfg.params
+    fmask = mask.astype(jnp.float32)
+    c = st.counters
+    c = c._replace(cycles=c.cycles + fmask * p.inv_flash,
+                   inv_full=c.inv_full + jnp.sum(fmask),
+                   inv_per_cache=c.inv_per_cache + fmask)
+    return st._replace(wvalid=wvalid, lr=lr, pa=pa, counters=c)
+
+
+# --------------------------------------------------------------------------
+# single-cache wrappers (classic API, used by tests + serial engine)
 # --------------------------------------------------------------------------
 
 def writeback_block(cfg: ProtoConfig, st: Store, cid, b, guard=True
@@ -108,210 +234,257 @@ def writeback_block(cfg: ProtoConfig, st: Store, cid, b, guard=True
     """Write back the dirty words of block `b` of cache `cid` to L2.
 
     Returns (store', did_wb) where did_wb is 1.0 if any word moved.
-    With guard=False or b<0 this is a no-op (used in padded scans).
-    """
-    W = cfg.block_words
-    start = jnp.clip(jnp.asarray(b, jnp.int32), 0) * W
-    guard = jnp.asarray(guard, bool) & (jnp.asarray(b, jnp.int32) >= 0)
-    l1_row = st.l1[cid]
-    dirty_row = st.wdirty[cid]
-    l1_blk = lax.dynamic_slice(l1_row, (start,), (W,))
-    dirty_blk = lax.dynamic_slice(dirty_row, (start,), (W,))
-    sel = dirty_blk & guard
-    l2_blk = lax.dynamic_slice(st.l2, (start,), (W,))
-    l2 = lax.dynamic_update_slice(st.l2, jnp.where(sel, l1_blk, l2_blk), (start,))
-    new_dirty = lax.dynamic_update_slice(dirty_row, dirty_blk & ~sel, (start,))
-    wdirty = st.wdirty.at[cid].set(new_dirty)
-    did = jnp.any(sel).astype(jnp.float32)
-    c = st.counters
-    c = c._replace(l2_accesses=c.l2_accesses + did, wb_blocks=c.wb_blocks + did)
-    return st._replace(l2=l2, wdirty=wdirty, counters=c), did
+    With guard=False or b<0 this is a no-op (used in padded batches)."""
+    hot = _one_hot(cfg, cid)
+    blks = jnp.where(hot, jnp.asarray(b, jnp.int32), INVALID)
+    st, did = b_writeback(cfg, st, blks, hot & jnp.asarray(guard, bool))
+    return st, jnp.sum(did)
 
 
 def drain_fifo(cfg: ProtoConfig, st: Store, cid, pos) -> Tuple[Store, jnp.ndarray]:
-    """Selective flush: drain cache `cid`'s sFIFO up to seq `pos` (§4.2 step 3),
-    writing each drained block back to L2.  pos<0 drains nothing;
+    """Selective flush: drain cache `cid`'s sFIFO up to seq `pos` (§4.2 step
+    3), writing each drained block back to L2.  pos<0 drains nothing;
     pos=+inf (use drain_fifo_all) drains everything.
 
     Returns (store', n_blocks_written)."""
-    f = _get(st.fifo, cid)
-    f, drained, _ = sfifo.drain_upto(f, pos)
-    st = st._replace(fifo=_set(st.fifo, cid, f))
-
-    def body(carry, b):
-        s = carry
-        s, did = writeback_block(cfg, s, cid, b)
-        return s, did
-
-    st, dids = lax.scan(body, st, drained)
-    n_wb = jnp.sum(dids)
-    # victim cache busy: handshake + pipelined writebacks
-    p = cfg.params
-    cyc = p.l2_lat + n_wb * p.wb_per_block
-    c = st.counters
-    c = c._replace(cycles=c.cycles.at[cid].add(cyc))
-    return st._replace(counters=c), n_wb
+    hot = _one_hot(cfg, cid)
+    st, n_wb = b_drain(cfg, st, jnp.where(hot, jnp.asarray(pos, jnp.int32),
+                                          INVALID), hot)
+    return st, jnp.sum(n_wb)
 
 
 def drain_fifo_all(cfg: ProtoConfig, st: Store, cid) -> Tuple[Store, jnp.ndarray]:
-    return drain_fifo(cfg, st, cid, jnp.int32(2**30))
+    return drain_fifo(cfg, st, cid, _DRAIN_ALL)
 
 
 def invalidate_cache(cfg: ProtoConfig, st: Store, cid) -> Store:
-    """Whole-cache invalidate: flush dirty first (§2.2), flash-invalidate,
-    clear LR-TBL and PA-TBL (§4.4)."""
-    st, _ = drain_fifo_all(cfg, st, cid)
-    wvalid = st.wvalid.at[cid].set(jnp.zeros((cfg.n_words,), bool))
-    lr = _set(st.lr, cid, tables.lr_clear(_get(st.lr, cid)))
-    pa = _set(st.pa, cid, tables.pa_clear(_get(st.pa, cid)))
-    p = cfg.params
-    c = st.counters
-    c = c._replace(cycles=c.cycles.at[cid].add(p.inv_flash),
-                   inv_full=c.inv_full + 1.0,
-                   inv_per_cache=c.inv_per_cache.at[cid].add(1.0))
-    return st._replace(wvalid=wvalid, lr=lr, pa=pa, counters=c)
+    return b_invalidate(cfg, st, _one_hot(cfg, cid))
 
 
 # --------------------------------------------------------------------------
-# plain loads / stores through the cache
+# plain loads / stores through the cache — batched core + scalar wrappers
 # --------------------------------------------------------------------------
 
-def load(cfg: ProtoConfig, st: Store, cid, addr) -> Tuple[Store, jnp.ndarray]:
-    """Ordinary read.  L1 hit or fill-from-L2 (read-allocate)."""
-    hit = st.wvalid[cid, addr]
-    val = jnp.where(hit, st.l1[cid, addr], st.l2[addr])
-    l1 = st.l1.at[cid, addr].set(val)
-    wvalid = st.wvalid.at[cid, addr].set(True)
+def b_load(cfg: ProtoConfig, st: Store, active, addrs
+           ) -> Tuple[Store, jnp.ndarray]:
+    """Ordinary read, one per active cache.  L1 hit or fill-from-L2
+    (read-allocate).  addrs [n_caches] must be valid even for inactive
+    lanes (they are read but not written)."""
+    n = cfg.n_caches
+    active = jnp.asarray(active, bool)
+    b, o = _split(cfg, addrs)
+    lane = jnp.arange(n)
+    hit = st.wvalid[lane, b, o]
+    val = jnp.where(hit, st.l1[lane, b, o], st.l2[b, o])
+    l1 = st.l1.at[lane, b, o].set(jnp.where(active, val, st.l1[lane, b, o]))
+    wvalid = st.wvalid.at[lane, b, o].set(st.wvalid[lane, b, o] | active)
     p = cfg.params
+    miss = active & ~hit
     c = st.counters
     c = c._replace(
-        cycles=c.cycles.at[cid].add(jnp.where(hit, p.l1_lat, p.l1_lat + p.l2_lat)),
-        l1_hits=c.l1_hits + hit.astype(jnp.float32),
-        l1_misses=c.l1_misses + (~hit).astype(jnp.float32),
-        l2_accesses=c.l2_accesses + (~hit).astype(jnp.float32),
+        cycles=c.cycles + jnp.where(
+            active, jnp.where(hit, p.l1_lat, p.l1_lat + p.l2_lat), 0.0),
+        l1_hits=c.l1_hits + jnp.sum((active & hit).astype(jnp.float32)),
+        l1_misses=c.l1_misses + jnp.sum(miss.astype(jnp.float32)),
+        l2_accesses=c.l2_accesses + jnp.sum(miss.astype(jnp.float32)),
     )
     return st._replace(l1=l1, wvalid=wvalid, counters=c), val
 
 
-def store_word(cfg: ProtoConfig, st: Store, cid, addr, val, *, force_tail=False,
-               guard=True) -> Tuple[Store, jnp.ndarray]:
-    """Ordinary write (write-combining, no-allocate): update local copy, mark
-    dirty, record the block in the sFIFO.  Capacity eviction writes the
-    oldest block back (§2.2).  Returns (store', fifo_pos_of_block)."""
-    guard = jnp.asarray(guard, bool)
-    addr = jnp.asarray(addr, jnp.int32)
-    l1 = st.l1.at[cid, addr].set(jnp.where(guard, jnp.asarray(val, jnp.int32),
-                                           st.l1[cid, addr]))
-    wvalid = st.wvalid.at[cid, addr].set(st.wvalid[cid, addr] | guard)
-    wdirty = st.wdirty.at[cid, addr].set(st.wdirty[cid, addr] | guard)
+def b_store_word(cfg: ProtoConfig, st: Store, active, addrs, vals,
+                 force_tail=False) -> Tuple[Store, jnp.ndarray]:
+    """Ordinary write (write-combining, no-allocate), one per active cache:
+    update local copy, mark dirty, record the block in the sFIFO.  Capacity
+    eviction writes the oldest block back (§2.2).
+    Returns (store', fifo_pos_of_block [n_caches])."""
+    n = cfg.n_caches
+    active = jnp.asarray(active, bool)
+    b, o = _split(cfg, addrs)
+    lane = jnp.arange(n)
+    l1 = st.l1.at[lane, b, o].set(
+        jnp.where(active, jnp.asarray(vals, jnp.int32), st.l1[lane, b, o]))
+    wvalid = st.wvalid.at[lane, b, o].set(st.wvalid[lane, b, o] | active)
+    wdirty = st.wdirty.at[lane, b, o].set(st.wdirty[lane, b, o] | active)
     st = st._replace(l1=l1, wvalid=wvalid, wdirty=wdirty)
 
-    f = _get(st.fifo, cid)
-    f2, evicted, pos = sfifo.push(f, _blk(cfg, addr), force_tail)
-    f = _mask_tree(guard, f2, f)
-    evicted = jnp.where(guard, evicted, INVALID)
-    st = st._replace(fifo=_set(st.fifo, cid, f))
-    st, n_evwb = writeback_block(cfg, st, cid, evicted, guard=evicted >= 0)
+    ft = jnp.broadcast_to(jnp.asarray(force_tail, bool), (n,))
+    f2, evicted, pos = jax.vmap(sfifo.push)(st.fifo, b, ft)
+    fifo = _mask_tree_rows(active, f2, st.fifo)
+    evicted = jnp.where(active, evicted, INVALID)
+    st = st._replace(fifo=fifo)
+    st, n_evwb = b_writeback(cfg, st, evicted, evicted >= 0)
     p = cfg.params
     c = st.counters
-    c = c._replace(cycles=c.cycles.at[cid].add(
-        jnp.where(guard, p.l1_lat + n_evwb * p.wb_per_block, 0.0)))
+    c = c._replace(cycles=c.cycles + jnp.where(
+        active, p.l1_lat + n_evwb * p.wb_per_block, 0.0))
     return st._replace(counters=c), pos
+
+
+def load(cfg: ProtoConfig, st: Store, cid, addr) -> Tuple[Store, jnp.ndarray]:
+    """Ordinary read.  L1 hit or fill-from-L2 (read-allocate)."""
+    st, vals = b_load(cfg, st, _one_hot(cfg, cid), _fill(cfg, addr))
+    return st, vals[cid]
+
+
+def store_word(cfg: ProtoConfig, st: Store, cid, addr, val, *, force_tail=False,
+               guard=True) -> Tuple[Store, jnp.ndarray]:
+    """Ordinary write through cache `cid`.  Returns (store', fifo_pos)."""
+    hot = _one_hot(cfg, cid) & jnp.asarray(guard, bool)
+    st, pos = b_store_word(cfg, st, hot, _fill(cfg, addr),
+                           jnp.broadcast_to(jnp.asarray(val, jnp.int32),
+                                            (cfg.n_caches,)),
+                           force_tail)
+    return st, pos[cid]
 
 
 # --------------------------------------------------------------------------
 # atomics
 # --------------------------------------------------------------------------
 
+def b_atomic_l1(cfg, st: Store, active, addrs, expect, new, is_cas
+                ) -> Tuple[Store, jnp.ndarray]:
+    """Atomic executed at the L1 (local scope), one per active cache.
+    Returns (store', old_values [n_caches])."""
+    st, cur = b_load(cfg, st, active, addrs)
+    success = jnp.where(is_cas, cur == expect, True)
+    st, _ = b_store_word(cfg, st, jnp.asarray(active, bool) & success, addrs,
+                         jnp.where(success, new, cur))
+    return st, cur
+
+
+def b_atomic_l2(cfg, st: Store, active, addrs, expect, new, is_cas
+                ) -> Tuple[Store, jnp.ndarray]:
+    """Atomic executed at the L2 (global sync point), one per active cache.
+    Active lanes must target pairwise-distinct words.  Returns (store', old)."""
+    n, nb = cfg.n_caches, cfg.n_blocks
+    active = jnp.asarray(active, bool)
+    b, o = _split(cfg, addrs)
+    lane = jnp.arange(n)
+    cur = st.l2[b, o]
+    success = jnp.where(is_cas, cur == expect, True)
+    write = active & success
+    l2 = st.l2.at[jnp.where(write, b, nb), o].set(
+        jnp.where(success, jnp.asarray(new, jnp.int32), cur), mode="drop")
+    # local copy of this word is no longer authoritative
+    wvalid = st.wvalid.at[lane, b, o].set(st.wvalid[lane, b, o] & ~active)
+    wdirty = st.wdirty.at[lane, b, o].set(st.wdirty[lane, b, o] & ~active)
+    p = cfg.params
+    fact = active.astype(jnp.float32)
+    c = st.counters
+    c = c._replace(cycles=c.cycles + fact * p.l2_lat,
+                   l2_accesses=c.l2_accesses + jnp.sum(fact))
+    return st._replace(l2=l2, wvalid=wvalid, wdirty=wdirty, counters=c), cur
+
+
 def _atomic_l1(cfg, st: Store, cid, addr, expect, new, is_cas
                ) -> Tuple[Store, jnp.ndarray]:
-    """Atomic executed at the L1 (local scope). Returns (store', old_value)."""
-    st, cur = load(cfg, st, cid, addr)
-    success = jnp.where(is_cas, cur == expect, True)
-    st, _ = store_word(cfg, st, cid, addr, jnp.where(success, new, cur),
-                       guard=success)
-    return st, cur
+    st, old = b_atomic_l1(cfg, st, _one_hot(cfg, cid), _fill(cfg, addr),
+                          expect, new, is_cas)
+    return st, old[cid]
 
 
 def _atomic_l2(cfg, st: Store, cid, addr, expect, new, is_cas
                ) -> Tuple[Store, jnp.ndarray]:
-    """Atomic executed at the L2 (global sync point). Returns (store', old)."""
-    cur = st.l2[addr]
-    success = jnp.where(is_cas, cur == expect, True)
-    l2 = st.l2.at[addr].set(jnp.where(success, new, cur))
-    # local copy of this word is no longer authoritative
-    wvalid = st.wvalid.at[cid, addr].set(False)
-    wdirty = st.wdirty.at[cid, addr].set(False)
-    p = cfg.params
-    c = st.counters
-    c = c._replace(cycles=c.cycles.at[cid].add(p.l2_lat),
-                   l2_accesses=c.l2_accesses + 1.0)
-    return st._replace(l2=l2, wvalid=wvalid, wdirty=wdirty, counters=c), cur
+    st, old = b_atomic_l2(cfg, st, _one_hot(cfg, cid), _fill(cfg, addr),
+                          expect, new, is_cas)
+    return st, old[cid]
 
 
 # --------------------------------------------------------------------------
 # scoped synchronization — local (work-group) scope, §4.1 / §4.4
 # --------------------------------------------------------------------------
 
-def local_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
-    """atomic_ST_rel_wg: release at local scope.  Pushes the sync block to the
-    sFIFO tail, records (addr -> pos) in the LR-TBL, atomic executes in L1."""
-    st, pos = store_word(cfg, st, cid, addr, val, force_tail=True)
-    lr = _get(st.lr, cid)
-    lr, ev_addr, ev_ptr = tables.lr_insert(lr, addr, pos)
-    st = st._replace(lr=_set(st.lr, cid, lr))
+def local_release_b(cfg: ProtoConfig, st: Store, active, addrs, vals) -> Store:
+    """atomic_ST_rel_wg for every active cache: push the sync block to the
+    sFIFO tail, record (addr -> pos) in the LR-TBL, atomic executes in L1."""
+    active = jnp.asarray(active, bool)
+    st, pos = b_store_word(cfg, st, active, addrs, vals, force_tail=True)
+    addrs32 = jnp.asarray(addrs, jnp.int32)
+    lr2, ev_addr, ev_ptr = jax.vmap(tables.lr_insert)(st.lr, addrs32, pos)
+    st = st._replace(lr=_mask_tree_rows(active, lr2, st.lr))
     # conservative overflow policy: an evicted LR record forces a drain up to
     # its recorded position so no release is silently lost (DESIGN.md §2)
-    st, _ = drain_fifo(cfg, st, cid, jnp.where(ev_addr >= 0, ev_ptr, INVALID))
+    ev = jnp.where(active & (ev_addr >= 0), ev_ptr, INVALID)
+    st, _ = b_drain(cfg, st, ev, active)
     p = cfg.params
+    fact = active.astype(jnp.float32)
     c = st.counters
-    c = c._replace(cycles=c.cycles.at[cid].add(p.tbl_lat),
-                   local_syncs=c.local_syncs + 1.0)
+    c = c._replace(cycles=c.cycles + fact * p.tbl_lat,
+                   local_syncs=c.local_syncs + jnp.sum(fact))
     return st._replace(counters=c)
+
+
+def local_acquire_b(cfg: ProtoConfig, st: Store, active, addrs, expect, new
+                    ) -> Tuple[Store, jnp.ndarray]:
+    """atomic_CAS_acq_wg for every active cache (§4.4).  Lanes whose PA-TBL
+    holds the address are promoted: full invalidate + CAS at L2.  Others do
+    a cheap L1 CAS.  Both paths execute masked (no lane-level cond)."""
+    active = jnp.asarray(active, bool)
+    addrs32 = jnp.asarray(addrs, jnp.int32)
+    promote = jax.vmap(tables.pa_contains)(st.pa, addrs32) & active
+    st = b_invalidate(cfg, st, promote)
+    st, old_l2 = b_atomic_l2(cfg, st, promote, addrs, expect, new, True)
+    st, old_l1 = b_atomic_l1(cfg, st, active & ~promote, addrs, expect, new,
+                             True)
+    old = jnp.where(promote, old_l2, old_l1)
+    p = cfg.params
+    fact = active.astype(jnp.float32)
+    c = st.counters
+    c = c._replace(cycles=c.cycles + fact * p.tbl_lat,
+                   local_syncs=c.local_syncs + jnp.sum(fact),
+                   promotions=c.promotions
+                   + jnp.sum(promote.astype(jnp.float32)))
+    return st._replace(counters=c), old
+
+
+def local_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
+    return local_release_b(cfg, st, _one_hot(cfg, cid), _fill(cfg, addr),
+                           jnp.broadcast_to(jnp.asarray(val, jnp.int32),
+                                            (cfg.n_caches,)))
 
 
 def local_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
                   ) -> Tuple[Store, jnp.ndarray]:
-    """atomic_CAS_acq_wg: acquire at local scope (§4.4).  If the PA-TBL holds
-    `addr` the acquire is promoted: full invalidate + CAS at L2.  Otherwise a
-    cheap L1 CAS."""
-    promote = tables.pa_contains(_get(st.pa, cid), addr)
-
-    def promoted(s):
-        s = invalidate_cache(cfg, s, cid)          # drains dirty, clears tables
-        s, old = _atomic_l2(cfg, s, cid, addr, expect, new, True)
-        c = s.counters
-        c = c._replace(promotions=c.promotions + 1.0)
-        return s._replace(counters=c), old
-
-    def normal(s):
-        return _atomic_l1(cfg, s, cid, addr, expect, new, True)
-
-    st, old = lax.cond(promote, promoted, normal, st)
-    p = cfg.params
-    c = st.counters
-    c = c._replace(cycles=c.cycles.at[cid].add(p.tbl_lat),
-                   local_syncs=c.local_syncs + 1.0)
-    return st._replace(counters=c), old
+    st, old = local_acquire_b(cfg, st, _one_hot(cfg, cid), _fill(cfg, addr),
+                              expect, new)
+    return st, old[cid]
 
 
 # --------------------------------------------------------------------------
 # global (device/cmp) scope — the heavyweight ops used by Baseline/Steal-only
 # --------------------------------------------------------------------------
 
-def global_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
-    st, _ = drain_fifo_all(cfg, st, cid)
-    st, _ = _atomic_l2(cfg, st, cid, addr, 0, val, False)
+def global_release_b(cfg: ProtoConfig, st: Store, active, addrs, vals) -> Store:
+    active = jnp.asarray(active, bool)
+    st, _ = b_drain(cfg, st, jnp.where(active, _DRAIN_ALL, INVALID), active)
+    st, _ = b_atomic_l2(cfg, st, active, addrs, 0, vals, False)
     c = st.counters
-    return st._replace(counters=c._replace(global_syncs=c.global_syncs + 1.0))
+    return st._replace(counters=c._replace(
+        global_syncs=c.global_syncs + jnp.sum(active.astype(jnp.float32))))
+
+
+def global_acquire_b(cfg: ProtoConfig, st: Store, active, addrs, expect, new
+                     ) -> Tuple[Store, jnp.ndarray]:
+    active = jnp.asarray(active, bool)
+    st = b_invalidate(cfg, st, active)
+    st, old = b_atomic_l2(cfg, st, active, addrs, expect, new, True)
+    c = st.counters
+    return st._replace(counters=c._replace(
+        global_syncs=c.global_syncs
+        + jnp.sum(active.astype(jnp.float32)))), old
+
+
+def global_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
+    return global_release_b(cfg, st, _one_hot(cfg, cid), _fill(cfg, addr),
+                            jnp.broadcast_to(jnp.asarray(val, jnp.int32),
+                                             (cfg.n_caches,)))
 
 
 def global_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
                    ) -> Tuple[Store, jnp.ndarray]:
-    st = invalidate_cache(cfg, st, cid)
-    st, old = _atomic_l2(cfg, st, cid, addr, expect, new, True)
-    c = st.counters
-    return st._replace(counters=c._replace(global_syncs=c.global_syncs + 1.0)), old
+    st, old = global_acquire_b(cfg, st, _one_hot(cfg, cid), _fill(cfg, addr),
+                               expect, new)
+    return st, old[cid]
 
 
 # --------------------------------------------------------------------------
@@ -319,27 +492,22 @@ def global_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
 # --------------------------------------------------------------------------
 
 def _probe_and_selective_flush(cfg: ProtoConfig, st: Store, cid, addr) -> Store:
-    """Broadcast a selective-flush(addr) probe via L2 to every L1 (§4.2 step 2).
-    Only caches with an LR-TBL entry for addr drain — up to the recorded
-    position — then move addr into their PA-TBL.  Everyone else NACKs."""
+    """Broadcast a selective-flush(addr) probe via L2 to every L1 (§4.2 step
+    2).  Only caches with an LR-TBL entry for addr drain — up to the
+    recorded position — then move addr into their PA-TBL.  Everyone else
+    NACKs.  One vmapped table sweep + one masked drain-scatter; no scan."""
     p = cfg.params
     n = cfg.n_caches
-
-    def body(carry, j):
-        s, wait = carry
-        lr_j = _get(s.lr, j)
-        ptr = tables.lr_lookup(lr_j, addr)
-        has = (ptr >= 0) & (j != cid)
-        s, n_wb = drain_fifo(cfg, s, j, jnp.where(has, ptr, INVALID))
-        lr_j2 = tables.lr_remove(lr_j, addr)
-        s = s._replace(lr=_set(s.lr, j, _mask_tree(has, lr_j2, _get(s.lr, j))))
-        pa_j = _get(s.pa, j)
-        pa_j2 = tables.pa_insert(pa_j, addr)
-        s = s._replace(pa=_set(s.pa, j, _mask_tree(has, pa_j2, pa_j)))
-        wait = wait + jnp.where(has, p.l2_lat + n_wb * p.wb_per_block, 1.0)
-        return (s, wait), None
-
-    (st, wait), _ = lax.scan(body, (st, jnp.float32(0.0)), jnp.arange(n))
+    addr32 = jnp.asarray(addr, jnp.int32)
+    ptrs = jax.vmap(tables.lr_lookup, in_axes=(0, None))(st.lr, addr32)
+    has = (ptrs >= 0) & (jnp.arange(n) != jnp.asarray(cid, jnp.int32))
+    st, n_wb = b_drain(cfg, st, jnp.where(has, ptrs, INVALID),
+                       jnp.ones((n,), bool))
+    lr2 = jax.vmap(tables.lr_remove, in_axes=(0, None))(st.lr, addr32)
+    pa2 = jax.vmap(tables.pa_insert, in_axes=(0, None))(st.pa, addr32)
+    st = st._replace(lr=_mask_tree_rows(has, lr2, st.lr),
+                     pa=_mask_tree_rows(has, pa2, st.pa))
+    wait = jnp.sum(jnp.where(has, p.l2_lat + n_wb * p.wb_per_block, 1.0))
     c = st.counters
     c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + p.l2_lat + wait),
                    probes=c.probes + jnp.float32(n - 1))
@@ -375,12 +543,9 @@ def srsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
     p = cfg.params
     st, _ = drain_fifo_all(cfg, st, cid)
     st, _ = _atomic_l2(cfg, st, cid, addr, 0, val, False)
-
-    def body(s, j):
-        pa_j = tables.pa_insert(_get(s.pa, j), addr)
-        return s._replace(pa=_set(s.pa, j, pa_j)), None
-
-    st, _ = lax.scan(body, st, jnp.arange(cfg.n_caches))
+    pa = jax.vmap(tables.pa_insert, in_axes=(0, None))(
+        st.pa, jnp.asarray(addr, jnp.int32))
+    st = st._replace(pa=pa)
     c = st.counters
     c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + cfg.n_caches * 1.0),
                    probes=c.probes + jnp.float32(cfg.n_caches),
@@ -391,19 +556,16 @@ def srsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
 def rsp_remote_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
                        ) -> Tuple[Store, jnp.ndarray]:
     """Original RSP (§3): promote by flushing EVERY L1 — cost scales with the
-    number of caches.  The caller then invalidates its own L1 and CASes at L2."""
+    number of caches.  The caller then invalidates its own L1 and CASes at
+    L2.  The flush-all is one batched drain-scatter instead of a scan."""
     p = cfg.params
-
-    def body(carry, j):
-        s, wait = carry
-        s, n_wb = drain_fifo_all(cfg, s, j)
-        wait = wait + p.l2_lat + n_wb * p.wb_per_block  # serialized at L2 port
-        return (s, wait), None
-
-    (st, wait), _ = lax.scan(body, (st, jnp.float32(0.0)), jnp.arange(cfg.n_caches))
+    n = cfg.n_caches
+    st, n_wb = b_drain(cfg, st, jnp.full((n,), _DRAIN_ALL),
+                       jnp.ones((n,), bool))
+    wait = jnp.sum(p.l2_lat + n_wb * p.wb_per_block)  # serialized at L2 port
     c = st.counters
     c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + wait),
-                   probes=c.probes + jnp.float32(cfg.n_caches - 1))
+                   probes=c.probes + jnp.float32(n - 1))
     st = st._replace(counters=c)
     st = invalidate_cache(cfg, st, cid)
     st, old = _atomic_l2(cfg, st, cid, addr, expect, new, True)
@@ -415,19 +577,14 @@ def rsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
     """Original RSP: flush own, ST at L2, then INVALIDATE every L1 (flush-all
     + flash-invalidate each — the unscalable part)."""
     p = cfg.params
+    n = cfg.n_caches
     st, _ = drain_fifo_all(cfg, st, cid)
     st, _ = _atomic_l2(cfg, st, cid, addr, 0, val, False)
-
-    def body(carry, j):
-        s, wait = carry
-        s = invalidate_cache(cfg, s, j)
-        wait = wait + p.l2_lat  # ack per cache through L2
-        return (s, wait), None
-
-    (st, wait), _ = lax.scan(body, (st, jnp.float32(0.0)), jnp.arange(cfg.n_caches))
+    st = b_invalidate(cfg, st, jnp.ones((n,), bool))
+    wait = jnp.float32(n) * p.l2_lat  # ack per cache through L2
     c = st.counters
     c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + wait),
-                   probes=c.probes + jnp.float32(cfg.n_caches),
+                   probes=c.probes + jnp.float32(n),
                    remote_syncs=c.remote_syncs + 1.0)
     return st._replace(counters=c)
 
@@ -438,22 +595,32 @@ def rsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
 
 @dataclasses.dataclass(frozen=True)
 class Protocol:
-    """The op table a scenario binds against (see worksteal.py)."""
+    """The op table a scenario binds against (see worksteal.py).
+
+    The `*_b` members are the batched owner-side ops the vectorized
+    scheduler uses (active-mask signature); thief ops stay single-cache —
+    remote promotion broadcasts to every L1, so it cannot share a step."""
     name: str
     owner_acquire: callable   # (cfg, st, cid, addr, expect, new) -> (st, old)
     owner_release: callable   # (cfg, st, cid, addr, val) -> st
     thief_acquire: callable
     thief_release: callable
+    owner_acquire_b: callable  # (cfg, st, active, addrs, expect, new)
+    owner_release_b: callable  # (cfg, st, active, addrs, vals)
 
 
 SRSP = Protocol("srsp", local_acquire, local_release,
-                srsp_remote_acquire, srsp_remote_release)
+                srsp_remote_acquire, srsp_remote_release,
+                local_acquire_b, local_release_b)
 RSP = Protocol("rsp", local_acquire, local_release,
-               rsp_remote_acquire, rsp_remote_release)
+               rsp_remote_acquire, rsp_remote_release,
+               local_acquire_b, local_release_b)
 GLOBAL = Protocol("global", global_acquire, global_release,
-                  global_acquire, global_release)
+                  global_acquire, global_release,
+                  global_acquire_b, global_release_b)
 LOCAL_ONLY = Protocol("local", local_acquire, local_release,
-                      local_acquire, local_release)  # NOT steal-safe — used to
-                                                     # demonstrate staleness
+                      local_acquire, local_release,
+                      local_acquire_b, local_release_b)  # NOT steal-safe —
+                                                         # demonstrates staleness
 
 PROTOCOLS = {p.name: p for p in (SRSP, RSP, GLOBAL, LOCAL_ONLY)}

@@ -1,1 +1,3 @@
-from repro.kernels.selective_flush.ops import selective_flush, selective_apply  # noqa: F401
+from repro.kernels.selective_flush.ops import (selective_flush,  # noqa: F401
+                                               selective_apply,
+                                               drain_writeback)

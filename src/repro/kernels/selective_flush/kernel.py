@@ -58,3 +58,65 @@ def selective_flush_pallas(bank: jnp.ndarray, indices: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((max_dirty, block_size), bank.dtype),
         interpret=interpret,
     )(indices, bank)
+
+
+def _writeback_kernel(idx_ref, l2_ref, row_ref, dirty_ref, out_ref):
+    i = pl.program_id(0)
+    valid = idx_ref[i] >= 0
+    sel = (dirty_ref[...] != 0) & valid
+    # The index list is pre-sorted, so duplicate destinations arrive in
+    # consecutive grid steps and the output block stays resident: merge onto
+    # the previous step's result instead of re-reading the (stale) L2 block.
+    first = (i == 0) | (idx_ref[i] != idx_ref[jnp.maximum(i - 1, 0)])
+    base = jnp.where(first, l2_ref[...], out_ref[...])
+    out_ref[...] = jnp.where(sel, row_ref[...], base)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def drain_writeback_pallas(l2: jnp.ndarray, rows: jnp.ndarray,
+                           dirty: jnp.ndarray, indices: jnp.ndarray,
+                           *, interpret: bool = False) -> jnp.ndarray:
+    """Masked scatter-merge of drained blocks into the L2 bank (the sFIFO
+    drain writeback, §2.2/§4.2): out = l2 with rows[i] merged into block
+    indices[i] under the per-word dirty mask.
+
+    Scatter twin of `selective_flush_pallas`: the drained-block index list
+    is scalar-prefetched so both the *input* L2 block and the *output* block
+    of each grid step are selected dynamically by the DMA engine, and the L2
+    bank is input/output-aliased so untouched blocks stay in place.  The
+    sequential grid gives deterministic last-writer-wins merging for
+    duplicate indices (same order as the jnp reference).
+
+    l2 [n_blocks, W]; rows [m, W]; dirty [m, W]; indices [m] int32 (-1 pad
+    entries write nothing).  Returns the merged [n_blocks, W] bank."""
+    n_blocks, block_size = l2.shape
+    m = indices.shape[0]
+    safe = jnp.where((indices >= 0) & (indices < n_blocks), indices, -1)
+    # group duplicate destinations into consecutive grid steps; the sort is
+    # stable, so within a destination the original (priority) order survives
+    order = jnp.argsort(safe, stable=True)
+    safe = safe[order]
+    rows = rows[order]
+    dirty = dirty[order]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            # pad entries (-1) clamp to block 0; the kernel's valid flag
+            # turns the write into a copy of that block onto itself
+            pl.BlockSpec((1, block_size),
+                         lambda i, idx: (jnp.maximum(idx[i], 0), 0)),
+            pl.BlockSpec((1, block_size), lambda i, idx: (i, 0)),
+            pl.BlockSpec((1, block_size), lambda i, idx: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_size),
+                               lambda i, idx: (jnp.maximum(idx[i], 0), 0)),
+    )
+    return pl.pallas_call(
+        _writeback_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_size), l2.dtype),
+        input_output_aliases={1: 0},   # l2 bank updated in place
+        interpret=interpret,
+    )(safe, l2, rows, dirty.astype(jnp.int32))

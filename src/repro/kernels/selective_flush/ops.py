@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret
-from repro.kernels.selective_flush.kernel import selective_flush_pallas
+from repro.kernels.selective_flush.kernel import (drain_writeback_pallas,
+                                                  selective_flush_pallas)
 from repro.kernels.selective_flush import ref
 
 
@@ -33,3 +34,23 @@ def selective_apply(bank: jnp.ndarray, updates: jnp.ndarray,
     """Scatter compacted updates back into the bank (the remote 'acquire'
     side applying a flushed delta)."""
     return ref.selective_apply_ref(bank, updates, indices)
+
+
+def drain_writeback(l2: jnp.ndarray, rows: jnp.ndarray, dirty: jnp.ndarray,
+                    indices: jnp.ndarray, *, use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Merge drained L1 blocks into the L2 bank under a per-word dirty mask
+    (the protocol engine's drain/writeback scatter — see protocol.b_drain).
+
+    Dispatches to the Pallas scatter kernel on TPU; on CPU the jnp
+    reference is both the validation oracle and the fast path (XLA fuses
+    the scatter-max/gather pair), so interpret-mode Pallas is reserved for
+    the kernel equivalence tests."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.drain_writeback_ref(l2, rows, dirty, indices)
+    if interpret is None:
+        interpret = default_interpret()
+    return drain_writeback_pallas(l2, rows, dirty, indices,
+                                  interpret=interpret)

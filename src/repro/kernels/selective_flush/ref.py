@@ -21,3 +21,28 @@ def selective_apply_ref(bank: jnp.ndarray, updates: jnp.ndarray,
     safe = jnp.where(valid, indices, bank.shape[0])  # dropped
     return bank.at[safe].set(jnp.where(valid[:, None], updates,
                                        jnp.zeros_like(updates)), mode="drop")
+
+
+def drain_writeback_ref(l2: jnp.ndarray, rows: jnp.ndarray,
+                        dirty: jnp.ndarray, indices: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Masked scatter-merge of drained cache blocks into the L2 bank.
+
+    l2 [n_blocks, W]; rows [m, W] drained L1 block values; dirty [m, W] bool
+    per-word writeback mask; indices [m] int32 destination block ids (-1 or
+    >= n_blocks entries are dropped).
+
+    out[b, w] = rows[i, w] for the *last* list entry i with indices[i] == b
+    and dirty[i, w]; untouched words keep their l2 value.  List order is the
+    priority (later wins), matching the serial engine's ascending drain
+    order, so block-level false sharing merges deterministically."""
+    nb = l2.shape[0]
+    m = indices.shape[0]
+    g = (indices >= 0) & (indices < nb)
+    sel = dirty & g[:, None]
+    prio = jnp.where(sel, jnp.arange(1, m + 1, dtype=jnp.int32)[:, None], 0)
+    owner = jnp.zeros(l2.shape, jnp.int32).at[
+        jnp.where(g, indices, nb)].max(prio, mode="drop")
+    src = jnp.clip(owner - 1, 0)
+    vals = rows[src, jnp.arange(l2.shape[1])[None, :]]
+    return jnp.where(owner > 0, vals, l2)

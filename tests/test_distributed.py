@@ -63,6 +63,7 @@ print(json.dumps({"loss1": float(m1["loss"]), "loss2": float(m2["loss"]),
 """
 
 
+@pytest.mark.slow
 def test_spmd_matches_single_device():
     rec = _run(_SPMD_SCRIPT)
     assert rec["has_collectives"], "sharded step lowered without collectives?"

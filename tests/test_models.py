@@ -16,6 +16,12 @@ from repro.train.train_step import make_train_step
 KEY = jax.random.PRNGKey(0)
 RNG = np.random.default_rng(0)
 
+# tier-1 smokes a dense, an MoE-heavy and a multimodal representative;
+# the remaining (slower-compiling) architectures run under `-m slow`
+FAST_ARCHS = {"qwen2.5-32b", "granite-moe-1b-a400m", "llava-next-mistral-7b"}
+ARCH_PARAMS = [a if a in FAST_ARCHS else
+               pytest.param(a, marks=pytest.mark.slow) for a in ARCH_IDS]
+
 
 def _batch(cfg, b, s, labels=True):
     batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (b, s)),
@@ -32,7 +38,7 @@ def _batch(cfg, b, s, labels=True):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_config(arch, smoke=True)
     model = build(cfg)
@@ -52,7 +58,7 @@ def test_smoke_forward_and_train_step(arch):
     assert delta > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_full_forward(arch):
     cfg = get_config(arch, smoke=True)
     if cfg.moe is not None:  # disable capacity drops for exactness

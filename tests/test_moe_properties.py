@@ -4,6 +4,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import moe as M

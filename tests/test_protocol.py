@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements.txt); the hypothesis-free "
+                    "protocol checks live in test_engine_equivalence.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import protocol as P
@@ -98,11 +102,10 @@ def test_same_cu_optimization():
 
 def _dirty_subset_of_fifo(st_) -> bool:
     """Invariant: every dirty word's block is in that cache's sFIFO."""
-    wd = np.asarray(st_.wdirty)
+    wd = np.asarray(st_.wdirty)           # block-major [n, n_blocks, W]
     addrs = np.asarray(st_.fifo.addrs)
     for c in range(CFG.n_caches):
-        dirty_words = np.nonzero(wd[c])[0]
-        blocks = set(dirty_words // CFG.block_words)
+        blocks = set(np.nonzero(wd[c].any(axis=-1))[0])
         fifo_blocks = set(a for a in addrs[c] if a >= 0)
         if not blocks.issubset(fifo_blocks):
             return False

@@ -65,6 +65,7 @@ def test_straggler_detection():
     assert straggler and t.stragglers == 1 and dt > 0.4
 
 
+@pytest.mark.slow
 def test_trainer_loss_decreases(tmp_path):
     cfg = get_config("xlstm-125m", smoke=True)
     tcfg = TrainConfig(steps=25, batch=4, seq=64, lr=3e-3, log_every=1)
@@ -74,6 +75,7 @@ def test_trainer_loss_decreases(tmp_path):
     assert losses[-1] < losses[0] * 0.95, losses[:3] + losses[-3:]
 
 
+@pytest.mark.slow
 def test_fault_tolerant_restart(tmp_path):
     """Inject a failure mid-run; the runner must restore from the last
     checkpoint and finish all steps."""
