@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all bench bench-full
+.PHONY: test test-slow test-all bench bench-full sweep
 
 # Tier-1: fast suite (slow-marked full-size sims excluded via pyproject addopts)
 test:
@@ -24,3 +24,8 @@ bench:
 bench-full:
 	$(PYTHON) benchmarks/protocol_engine_bench.py --apps pagerank sssp \
 	  --scenarios baseline steal_only rsp srsp --out BENCH_protocol_engine.json
+
+# Workload-subsystem sweep: protocol x workload x n_agents grid plus the
+# buffer-donation A/B -> BENCH_workloads.json (schema: benchmarks/SCHEMA.md)
+sweep:
+	$(PYTHON) -m repro.workloads.sweep --out BENCH_workloads.json

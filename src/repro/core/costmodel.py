@@ -61,12 +61,21 @@ class Counters(NamedTuple):
 
 
 def make_counters(n_caches: int) -> Counters:
-    z = jnp.float32(0.0)
+    # one distinct zero buffer per scalar: a Counters pytree is donated
+    # through the scheduler jit boundary (harness.py), and XLA rejects
+    # donating the same buffer twice — a shared 0.0 constant would be.
+    zs = jnp.zeros((11,), jnp.float32)
+    (l2_accesses, wb_blocks, inv_full, probes, promotions, local_syncs,
+     remote_syncs, global_syncs, l1_hits, l1_misses, steals) = \
+        (zs[i] for i in range(11))
     return Counters(cycles=jnp.zeros((n_caches,), jnp.float32),
-                    l2_accesses=z, wb_blocks=z, inv_full=z,
+                    l2_accesses=l2_accesses, wb_blocks=wb_blocks,
+                    inv_full=inv_full,
                     inv_per_cache=jnp.zeros((n_caches,), jnp.float32),
-                    probes=z, promotions=z, local_syncs=z, remote_syncs=z,
-                    global_syncs=z, l1_hits=z, l1_misses=z, steals=z)
+                    probes=probes, promotions=promotions,
+                    local_syncs=local_syncs, remote_syncs=remote_syncs,
+                    global_syncs=global_syncs, l1_hits=l1_hits,
+                    l1_misses=l1_misses, steals=steals)
 
 
 def charge(c: Counters, cid, cyc) -> Counters:

@@ -1,0 +1,42 @@
+"""Pluggable asymmetric-sharing workloads (DESIGN.md §7).
+
+Every registered workload module implements the same contract:
+
+  build(scenario, n_agents, seed=0, *, proto=None, **kw) -> Bench
+      Bench(wl, state, ops, check): the harness Workload, a fresh initial
+      state, extra scheduler operands, and a host-side self-check
+      `check(final_state) -> {"ok": bool, "check_fails": int, ...}` that
+      detects protocol bugs (lost updates, stale reads).  `proto`
+      overrides the scenario's op table — fault injection for tests.
+  VMAPPABLE: bool
+      True when `init_state(wl, seed)` is pure jnp, so the sweep can
+      stack replicas and run them in one compiled `run_batched_many`.
+  init_state(wl, seed) -> state      (VMAPPABLE modules only)
+
+Scenario names map onto the protocol tables exactly as the paper's
+work-steal harness does: baseline→global-scope, scope_only→local-scope
+(NOT remote-safe — the staleness demo), rsp→local+RSP promotion,
+srsp→local+selective promotion.
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "worksteal": "repro.workloads.worksteal",
+    "producer_consumer": "repro.workloads.producer_consumer",
+    "reader_lock": "repro.workloads.reader_lock",
+    "kv_directory": "repro.workloads.kv_directory",
+}
+
+
+def available():
+    return sorted(_MODULES)
+
+
+def get(name: str):
+    """Return the registered workload module (lazy import)."""
+    if name not in _MODULES:
+        raise KeyError(f"unknown workload {name!r}; "
+                       f"available: {available()}")
+    return importlib.import_module(_MODULES[name])

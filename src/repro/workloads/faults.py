@@ -1,0 +1,39 @@
+"""Protocol fault injection for workload self-check tests.
+
+Every workload's declarative spec carries a consistency check (lost
+updates, stale reads) that reads values THROUGH the simulated memory and
+compares them against host-invisible bookkeeping ground truth.  These
+helpers produce deliberately-weakened protocol tables; a workload whose
+self-check stays green under them isn't checking anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import protocol as P
+
+
+def _skip_promotion_acquire(cfg, st, cid, addr, expect, new):
+    """Remote acquire with the promotion machinery ripped out: CAS at L2,
+    but NO probe/selective-flush of remote sharers and NO own-cache
+    invalidation (paper §4.2 steps 1–3 skipped).  Local sharers' released
+    writes stay stranded in their L1s and the acquirer keeps serving stale
+    words from its own L1 — the exact failure mode sRSP's promotion
+    exists to prevent."""
+    st, old = P._atomic_l2(cfg, st, cid, addr, expect, new, True)
+    c = st.counters
+    return st._replace(
+        counters=c._replace(remote_syncs=c.remote_syncs + 1.0)), old
+
+
+def no_promotion(proto: P.Protocol) -> P.Protocol:
+    """`proto` with remote acquires no longer promoting (the ISSUE's
+    canonical injected bug).  Releases keep their real semantics.
+
+    (A release-side fault — skipping the own-cache flush — is NOT a
+    useful injection here: the next remote acquire's probe drains the
+    faulty releaser's stranded writes anyway, so the protocol
+    self-heals and no workload can observe it.)"""
+    return dataclasses.replace(
+        proto, name=proto.name + "+no_promotion",
+        thief_acquire=_skip_promotion_acquire)

@@ -1,0 +1,263 @@
+"""Workload-agnostic asymmetric-sharing harness (DESIGN.md §7).
+
+The paper evaluates sRSP on exactly one driver — Cederman–Tsigas
+work-stealing — but the protocol's claim is about *asymmetric sharing* in
+general: many cheap local-scope operations on privately-owned data,
+punctuated by rare remote-scope operations that observe another agent's
+state.  This module extracts the two schedulers that used to live inside
+`core/worksteal.py` into a generic pair that any workload can bind
+against, so new sharing shapes (producer/consumer drains, reader-heavy
+locks, directory lookups, …) plug in as declarative specs instead of
+forked engines.
+
+A workload is a `Workload` — a frozen, hashable bundle of module-level
+functions plus its static config and protocol op-table:
+
+  can_local(wl, s, *ops)     -> [n] bool  agents with a commuting turn ready
+  can_remote(wl, s, *ops)    -> [n] bool  agents whose next turn conflicts
+  local_turn(wl, s, mask, *ops) -> s'     execute one turn for every masked
+                                          agent at once, via the masked
+                                          multi-cache protocol ops
+  remote_turn(wl, s, wg, *ops) -> s'      one serializing turn for agent wg
+                                          (must internally no-op when
+                                          can_remote[wg] is False)
+  remote_bound(wl, s, *ops)  -> [n] f32   lower bound on extra cycles before
+                                          agent i's *next* remote turn (BIG
+                                          for agents that never go remote)
+  live(wl, s, *ops)          -> bool      while-loop guard (work remains and
+                                          the event budget isn't exhausted)
+
+The state `s` is an arbitrary NamedTuple whose first field is the protocol
+`Store` (the harness reads per-agent clocks from
+`s.store.counters.cycles`); everything else — queue occupancy, quotas,
+bookkeeping ground truth for the workload's self-check — is workload
+private.
+
+Scheduling contract (identical to the work-steal engines it was extracted
+from; proofs in DESIGN.md §4/§7):
+
+* `run_serial` is the reference: one turn per `lax.while_loop` trip, the
+  candidate with the smallest cycle clock acts next, ties to the lowest
+  index.  A candidate with a local turn runs `local_turn` with a one-hot
+  mask; otherwise `remote_turn`.
+* `run_batched` executes every local turn that *provably precedes* —
+  in the serial order — every remote turn that could observe it: batch
+  agent i iff `can_local[i]` and its clock beats every currently
+  remote-capable clock (argmin-index tie-break) and every future
+  first-remote lower bound `clock[j] + remote_bound[j]`.  Local turns of
+  distinct agents must commute (pairwise-disjoint L2 words — that is the
+  workload's declarative obligation), so the batched schedule is a
+  reordering of the serial one within commuting spans and final states
+  are bitwise identical.
+
+Buffer donation (ROADMAP open item: n_wgs=256 is memory-bound): the
+harness entry points donate the state argument, so XLA may alias the
+~O(n_caches · n_words) Store buffers through the jit boundary instead of
+copying them per call.  Set REPRO_NO_DONATE=1 before import to disable
+(used by the sweep's before/after measurement).  Callers must not reuse a
+state object after passing it in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import protocol as P
+
+BIG = jnp.float32(3e38)
+
+# scenario -> protocol op-table, subsystem-wide (the paper's §5 mapping;
+# worksteal additionally flags which scenarios steal)
+SCENARIO_PROTOCOLS = {
+    "baseline": "global",
+    "scope_only": "local",     # NOT remote-safe — the staleness demo
+    "steal_only": "global",
+    "rsp": "rsp",
+    "srsp": "srsp",
+}
+
+
+def resolve_proto(scenario: str, proto: P.Protocol = None) -> P.Protocol:
+    """Scenario's protocol table, overridable for fault injection."""
+    if proto is not None:
+        return proto
+    return P.PROTOCOLS[SCENARIO_PROTOCOLS[scenario]]
+
+
+class Bench(NamedTuple):
+    """Uniform handle the sweep/tests drive a workload through."""
+    wl: "Workload"
+    state: Any              # initial state (fresh per engine run — donation!)
+    ops: tuple              # extra operand arrays for the scheduler fns
+    check: Callable         # (final_state) -> dict (ok, check_fails, ...)
+
+
+def make_bench(cfg, build_workload, init_state, self_check, scenario,
+               seed=0, proto: P.Protocol = None) -> Bench:
+    """The standard build() body shared by the jnp-pure workloads."""
+    wl = build_workload(cfg, resolve_proto(scenario, proto))
+    return Bench(wl, init_state(wl, seed), (),
+                 lambda final: self_check(wl, final))
+
+# Donation toggle is read once at import: the jitted entry points below are
+# module-level, so the flag must be process-wide (the sweep A/B-tests it in
+# subprocesses).
+DONATE = os.environ.get("REPRO_NO_DONATE", "0") != "1"
+_don = {"donate_argnums": (1,)} if DONATE else {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Declarative workload spec bound to a config and a protocol.
+
+    Instances are jit static arguments: keep `cfg` a frozen dataclass and
+    every function a module-level def so two equal-valued Workloads hash
+    equal and share compiled schedulers."""
+    name: str
+    cfg: Any                    # frozen workload config (hashable)
+    proto: P.Protocol           # op table (owner/local + thief/remote ops)
+    has_remote: bool            # False => every turn commutes (static)
+    can_local: Callable
+    can_remote: Callable
+    local_turn: Callable
+    remote_turn: Callable
+    remote_bound: Callable
+    live: Callable
+
+
+def one_hot(n: int, wg) -> jnp.ndarray:
+    return jnp.arange(n, dtype=jnp.int32) == jnp.asarray(wg, jnp.int32)
+
+
+def charge(st: P.Store, mask, cycles) -> P.Store:
+    """Add per-agent compute cycles outside the protocol ops (task work)."""
+    c = st.counters
+    return st._replace(counters=c._replace(
+        cycles=c.cycles + jnp.where(mask, jnp.float32(cycles), 0.0)))
+
+
+def _serial_turn(wl: Workload, s, wg, can_l, ops):
+    n = s.store.counters.cycles.shape[0]
+    hot = one_hot(n, wg)
+    return lax.cond(
+        can_l[wg],
+        lambda st: wl.local_turn(wl, st, hot, *ops),
+        lambda st: wl.remote_turn(wl, st, wg, *ops),
+        s)
+
+
+@partial(jax.jit, static_argnums=(0,), **_don)
+def run_serial(wl: Workload, state, *ops):
+    """Event-driven reference scheduler: smallest clock acts next."""
+
+    def cond(s):
+        return wl.live(wl, s, *ops)
+
+    def body(s):
+        can_l = wl.can_local(wl, s, *ops)
+        can_r = wl.can_remote(wl, s, *ops)
+        cand = can_l | can_r
+        clocks = jnp.where(cand, s.store.counters.cycles, BIG)
+        wg = jnp.argmin(clocks).astype(jnp.int32)
+        return _serial_turn(wl, s, wg, can_l, ops)
+
+    return lax.while_loop(cond, body, state)
+
+
+@partial(jax.jit, static_argnums=(0,), **_don)
+def run_batched(wl: Workload, state, *ops):
+    """Vectorized scheduler: every provably-commuting local turn per trip.
+
+    Batch rule (DESIGN.md §4): agent i's local turn joins the batch iff
+    its clock precedes (a) every currently remote-capable agent's clock,
+    with the serial argmin-index tie-break, and (b) every future
+    first-remote lower bound clock[j] + remote_bound[j].  If the batch is
+    empty the trip falls back to one serial turn — remote turns always
+    execute alone, exactly at their serial position."""
+    n = state.store.counters.cycles.shape[0]
+    wgs = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(s):
+        return wl.live(wl, s, *ops)
+
+    def body(s):
+        can_l = wl.can_local(wl, s, *ops)
+        if not wl.has_remote:
+            # nothing ever conflicts: every ready agent acts each trip
+            return wl.local_turn(wl, s, can_l, *ops)
+        can_r = wl.can_remote(wl, s, *ops)
+        clocks_all = s.store.counters.cycles
+        cand = can_l | can_r
+        clocks = jnp.where(cand, clocks_all, BIG)
+        wg_min = jnp.argmin(clocks).astype(jnp.int32)
+        sclk = jnp.where(can_r, clocks_all, BIG)
+        ms = jnp.min(sclk)
+        js = jnp.argmin(sclk).astype(jnp.int32)
+        fence = jnp.min(jnp.where(can_l,
+                                  clocks_all + wl.remote_bound(wl, s, *ops),
+                                  BIG))
+        lex = (clocks_all < ms) | ((clocks_all == ms) & (wgs < js))
+        batch = can_l & lex & (clocks_all <= fence)
+
+        def do_batch(st):
+            return wl.local_turn(wl, st, batch, *ops)
+
+        def do_serial(st):
+            return _serial_turn(wl, st, wg_min, can_l, ops)
+
+        return lax.cond(jnp.any(batch), do_batch, do_serial, s)
+
+    return lax.while_loop(cond, body, state)
+
+
+@partial(jax.jit, static_argnums=(0,), **_don)
+def run_batched_many(wl: Workload, states, *ops):
+    """vmap of `run_batched` over a leading replica axis of `states`.
+
+    One compilation covers every replica of a (workload, protocol, size)
+    cell — the sweep's few-compilations path.  Finished replicas no-op
+    (every turn is internally guarded) while stragglers drain."""
+    return jax.vmap(lambda s: run_batched.__wrapped__(wl, s, *ops))(states)
+
+
+ENGINES = {"serial": run_serial, "batched": run_batched}
+
+
+def runner(engine: str):
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}")
+    return ENGINES[engine]
+
+
+def drain_all(cfg: P.ProtoConfig, st: P.Store) -> P.Store:
+    """Flush every cache completely (post-run memory audits)."""
+    n = cfg.n_caches
+    st, _ = P.b_drain(cfg, st, jnp.full((n,), P._DRAIN_ALL),
+                      jnp.ones((n,), bool))
+    return st
+
+
+def counters_dict(st: P.Store) -> dict:
+    """The standard counter summary every workload reports (run_app's set)."""
+    from repro.core import costmodel
+    c = st.counters
+    return {
+        "makespan": float(costmodel.makespan(c)),
+        "l2_accesses": float(c.l2_accesses),
+        "wb_blocks": float(c.wb_blocks),
+        "inv_full": float(c.inv_full),
+        "probes": float(c.probes),
+        "promotions": float(c.promotions),
+        "local_syncs": float(c.local_syncs),
+        "remote_syncs": float(c.remote_syncs),
+        "global_syncs": float(c.global_syncs),
+        "steals": float(c.steals),
+        "l1_hits": float(c.l1_hits),
+        "l1_misses": float(c.l1_misses),
+    }

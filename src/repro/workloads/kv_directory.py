@@ -1,0 +1,241 @@
+"""KV directory — owner-local updates, rare cross-owner remote lookups.
+
+Asymmetry shape: a shared hash directory of lock-protected buckets,
+partitioned so bucket ``b`` is owned by agent ``b % n_agents``.  Owners
+update their own buckets with local-scope synchronization (the hot
+path); after an agent drains its own update quota it performs a few
+*remote* lookups of buckets owned by others — the phase structure of a
+serving tier where each worker mostly touches its own shard of a shared
+KV/prefix-cache directory (`serve/engine.py`'s slot cache is the
+n_agents=1 degenerate case) and occasionally resolves another worker's
+entry.
+
+Spec (DESIGN.md §7):
+  * local turns: owner i round-robins over its own buckets — acquire
+    bucket lock, read the value THROUGH the store (owner stale-read
+    check), store value+delta and version+1, release.  Ownership
+    partitions the directory, so local turns of distinct agents commute.
+  * remote turn: lookup of a deterministic non-owned bucket — remote
+    acquire, read version and value words, compare against bookkept
+    ground truth, release.  New values are computed from bookkeeping,
+    never from store reads, so a protocol bug changes *checked values*
+    only, not the schedule.
+  * fence: an agent goes remote only after its remaining
+    ``upd_quota - upd_done`` local updates, each charging at least
+    ``task_cost`` cycles — the work-steal ``rem`` bound, re-derived.
+  * self-check: in-run version/value mismatches + post-run drained-L2
+    audit of every bucket (lost-update detection).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import protocol as P
+from repro.core.costmodel import CostParams
+from repro.workloads import harness
+
+VMAPPABLE = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    n_agents: int = 8
+    buckets_per_agent: int = 2
+    updates_per_agent: int = 6   # seed-jittered by +0/1 in init_state
+    lookups_per_agent: int = 2
+    task_cost: float = 20.0      # compute cycles charged per update turn
+    fifo_cap: int = 16
+    lr_cap: int = 8
+    pa_cap: int = 8
+    params: CostParams = dataclasses.field(default_factory=CostParams)
+
+    @property
+    def n_buckets(self) -> int:
+        return self.n_agents * self.buckets_per_agent
+
+    @property
+    def bstride(self) -> int:
+        return 16   # lock / version / value in one block
+
+    @property
+    def n_words(self) -> int:
+        return self.n_buckets * self.bstride
+
+    def proto_cfg(self) -> P.ProtoConfig:
+        return P.ProtoConfig(n_caches=self.n_agents, n_words=self.n_words,
+                             fifo_cap=self.fifo_cap, lr_cap=self.lr_cap,
+                             pa_cap=self.pa_cap, params=self.params)
+
+
+class KVState(NamedTuple):
+    store: P.Store
+    upd_done: jnp.ndarray   # [n] i32 updates completed per agent
+    look_done: jnp.ndarray  # [n] i32 lookups completed per agent
+    upd_quota: jnp.ndarray  # [n] i32 per-agent (seed-jittered) update target
+    ver: jnp.ndarray        # [n_buckets] i32 bookkeeping: true version
+    val: jnp.ndarray        # [n_buckets] i32 bookkeeping: true value
+    salt: jnp.ndarray       # [] i32 seed-derived delta/lookup salt
+    check_fails: jnp.ndarray  # [] i32
+    rounds: jnp.ndarray       # [] i32
+
+
+def _max_events(cfg: Config) -> int:
+    return cfg.n_agents * (cfg.updates_per_agent + 1
+                           + cfg.lookups_per_agent) + 4 * cfg.n_agents
+
+
+def _lanes(cfg: Config):
+    return jnp.arange(cfg.n_agents, dtype=jnp.int32)
+
+
+def _can_local(wl, s: KVState):
+    return s.upd_done < s.upd_quota
+
+
+def _can_remote(wl, s: KVState):
+    return (s.upd_done >= s.upd_quota) \
+        & (s.look_done < wl.cfg.lookups_per_agent)
+
+
+def _remote_bound(wl, s: KVState):
+    left = (s.upd_quota - s.upd_done).astype(jnp.float32)
+    return jnp.maximum(left, 0.0) * wl.cfg.task_cost
+
+
+def _live(wl, s: KVState):
+    work = jnp.any(s.upd_done < s.upd_quota) \
+        | jnp.any(s.look_done < wl.cfg.lookups_per_agent)
+    return work & (s.rounds < _max_events(wl.cfg))
+
+
+def _delta(lanes, upd_done, salt):
+    return (lanes + 1) + jnp.mod(upd_done * 7 + salt, jnp.int32(5))
+
+
+def _local_turn(wl, s: KVState, mask) -> KVState:
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    lanes = _lanes(cfg)
+    nb = cfg.n_buckets
+
+    # round-robin over own buckets: disjoint across agents by ownership
+    b = lanes + jnp.mod(s.upd_done, jnp.int32(cfg.buckets_per_agent)) \
+        * cfg.n_agents
+    lockb = b * cfg.bstride
+    delta = _delta(lanes, s.upd_done, s.salt)
+    newval = s.val[b] + delta
+
+    st = s.store
+    st, _ = wl.proto.owner_acquire_b(pc, st, mask, lockb, 0, 1)
+    st, vcur = P.b_load(pc, st, mask, lockb + 2)
+    st, _ = P.b_store_word(pc, st, mask, lockb + 2, newval)
+    st, _ = P.b_store_word(pc, st, mask, lockb + 1, s.ver[b] + 1)
+    st = wl.proto.owner_release_b(pc, st, mask, lockb, 0)
+    st = harness.charge(st, mask, cfg.task_cost)
+
+    # owner stale-read check: the value read through the store must be
+    # the bookkept one (integral, order-independent accumulation)
+    fails = jnp.sum((mask & (vcur != s.val[b])).astype(jnp.int32))
+    tgt = jnp.where(mask, b, nb)
+    return KVState(
+        store=st,
+        upd_done=s.upd_done + mask.astype(jnp.int32),
+        look_done=s.look_done,
+        upd_quota=s.upd_quota,
+        ver=s.ver.at[tgt].add(1, mode="drop"),
+        val=s.val.at[tgt].add(delta, mode="drop"),
+        salt=s.salt,
+        check_fails=s.check_fails + fails,
+        rounds=s.rounds + jnp.sum(mask.astype(jnp.int32)))
+
+
+def _remote_turn(wl, s: KVState, wg) -> KVState:
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    nb = cfg.n_buckets
+    do = _can_remote(wl, s)[wg]   # the scheduler's own predicate, in sync
+
+    def lookup(s: KVState) -> KVState:
+        t = jnp.mod(wg + 1 + s.look_done[wg] * 5 + s.salt, jnp.int32(nb))
+        t = jnp.where(jnp.mod(t, cfg.n_agents) == wg,
+                      jnp.mod(t + 1, jnp.int32(nb)), t)
+        lockt = t * cfg.bstride
+        st = s.store
+        st, old = wl.proto.thief_acquire(pc, st, wg, lockt, 0, 1)
+        st, rv = P.load(pc, st, wg, lockt + 1)
+        st, vv = P.load(pc, st, wg, lockt + 2)
+        st = wl.proto.thief_release(pc, st, wg, lockt, 0)
+        fails = (old != 0).astype(jnp.int32) \
+            + (rv != s.ver[t]).astype(jnp.int32) \
+            + (vv != s.val[t]).astype(jnp.int32)
+        return KVState(
+            store=st,
+            upd_done=s.upd_done,
+            look_done=s.look_done.at[wg].add(1),
+            upd_quota=s.upd_quota,
+            ver=s.ver, val=s.val, salt=s.salt,
+            check_fails=s.check_fails + fails,
+            rounds=s.rounds + 1)
+
+    def idle(s: KVState) -> KVState:
+        return s._replace(rounds=s.rounds + 1)
+
+    return lax.cond(do, lookup, idle, s)
+
+
+def build_workload(cfg: Config, proto: P.Protocol) -> harness.Workload:
+    return harness.Workload(
+        name="kv_directory", cfg=cfg, proto=proto, has_remote=True,
+        can_local=_can_local, can_remote=_can_remote,
+        local_turn=_local_turn, remote_turn=_remote_turn,
+        remote_bound=_remote_bound, live=_live)
+
+
+def init_state(wl, seed) -> KVState:
+    cfg = wl.cfg
+    lanes = _lanes(cfg)
+    seed = jnp.asarray(seed, jnp.int32)
+    quota = cfg.updates_per_agent + jnp.mod(seed * 17 + lanes * 11,
+                                            jnp.int32(2))
+    n = cfg.n_agents
+    return KVState(
+        store=P.make_store(cfg.proto_cfg()),
+        upd_done=jnp.zeros((n,), jnp.int32),
+        look_done=jnp.zeros((n,), jnp.int32),
+        upd_quota=quota.astype(jnp.int32),
+        ver=jnp.zeros((cfg.n_buckets,), jnp.int32),
+        val=jnp.zeros((cfg.n_buckets,), jnp.int32),
+        salt=jnp.mod(seed * 7919, jnp.int32(97)),
+        check_fails=jnp.int32(0),
+        rounds=jnp.int32(0))
+
+
+def self_check(wl, final: KVState) -> dict:
+    """In-run mismatches + drained-L2 per-bucket lost-update audit."""
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    fails = int(final.check_fails)
+    done = bool(np.all(np.asarray(final.upd_done)
+                       >= np.asarray(final.upd_quota))) and bool(
+        np.all(np.asarray(final.look_done) >= cfg.lookups_per_agent))
+    st = harness.drain_all(pc, final.store)
+    l2 = np.asarray(st.l2).reshape(-1)
+    ver = np.asarray(final.ver)
+    val = np.asarray(final.val)
+    for b in range(cfg.n_buckets):
+        base = b * cfg.bstride
+        fails += int(l2[base + 1] != ver[b]) + int(l2[base + 2] != val[b])
+    return {"ok": fails == 0 and done, "check_fails": fails,
+            "done": done, "events": int(final.rounds)}
+
+
+def build(scenario: str, n_agents: int, seed: int = 0, *,
+          proto: P.Protocol = None, **kw) -> harness.Bench:
+    return harness.make_bench(Config(n_agents=n_agents, **kw),
+                              build_workload, init_state, self_check,
+                              scenario, seed, proto)

@@ -1,0 +1,257 @@
+"""Producer/consumer drains — single remote consumer, many local producers.
+
+Asymmetry shape: every producer appends items to its *own* ring region
+with local-scope synchronization (the overwhelmingly common op); one
+consumer agent periodically performs a *remote-scope* drain of the
+fullest producer's region (the rare op).  This is the inverse of
+work-stealing's thief distribution — one hot remote agent instead of
+many occasional ones — and matches the one-sided access pattern of
+RDMA-style asymmetric mutual exclusion (arXiv:2208.09540).
+
+Spec (DESIGN.md §7):
+  * local turns: producer i appends item `produced[i]` inside its own
+    lock's critical section; the consumer burns a scratch turn (its own
+    region) while its drain credit is positive.  All local turns touch
+    pairwise-disjoint regions → they commute.
+  * remote turn: the consumer (agent 0) remote-acquires the victim's
+    lock, reads the count word and every fresh item THROUGH the store,
+    and releases.  Victim choice (largest produced-consumed gap) and the
+    consumed bookkeeping use host-invisible ground truth only, so the
+    schedule is identical under a buggy protocol — the bug surfaces in
+    the checked values, not as divergence.
+  * fence: the consumer's next drain is at least `credit · scratch_cost`
+    cycles away (each scratch turn charges exactly that); producers
+    never go remote (bound = BIG).
+  * self-check: count word must equal the victim's true produced count
+    at the drain's serial position; Σ item values read must equal the
+    bookkept Σ expected; post-run, the drained L2 image must hold every
+    item (lost-update audit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import protocol as P
+from repro.core.costmodel import CostParams
+from repro.workloads import harness
+
+VMAPPABLE = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    n_agents: int = 8
+    max_items: int = 8          # static per-producer quota bound
+    min_items: int = 4
+    warmup: int = 3             # consumer scratch turns between drains
+    scratch_cost: float = 20.0  # compute cycles charged per local turn
+    fifo_cap: int = 16
+    lr_cap: int = 8
+    pa_cap: int = 8
+    params: CostParams = dataclasses.field(default_factory=CostParams)
+
+    @property
+    def stride(self) -> int:
+        return (2 + self.max_items + 15) // 16 * 16
+
+    @property
+    def n_words(self) -> int:
+        return self.n_agents * self.stride
+
+    def proto_cfg(self) -> P.ProtoConfig:
+        return P.ProtoConfig(n_caches=self.n_agents, n_words=self.n_words,
+                             fifo_cap=self.fifo_cap, lr_cap=self.lr_cap,
+                             pa_cap=self.pa_cap, params=self.params)
+
+
+class PCState(NamedTuple):
+    store: P.Store
+    produced: jnp.ndarray    # [n] i32 bookkeeping: items appended per producer
+    consumed: jnp.ndarray    # [n] i32 bookkeeping: items drained per producer
+    quota: jnp.ndarray       # [n] i32 per-producer target (0 for agent 0)
+    credit: jnp.ndarray      # [] i32 consumer scratch turns before next drain
+    sum_seen: jnp.ndarray    # [] i32 Σ item values read THROUGH the store
+    sum_expect: jnp.ndarray  # [] i32 Σ expected values of drained items
+    check_fails: jnp.ndarray # [] i32 in-run consistency violations
+    rounds: jnp.ndarray      # [] i32
+
+
+def _item_val(agent, j):
+    """Deterministic item payload — what the self-check replays."""
+    return (jnp.asarray(agent, jnp.int32) + 1) * 131 \
+        + 7 * jnp.asarray(j, jnp.int32) + 1
+
+
+def _max_events(cfg: Config) -> int:
+    return (cfg.warmup + 3) * cfg.n_agents * cfg.max_items + 4 * cfg.n_agents
+
+
+def _lanes(cfg: Config):
+    return jnp.arange(cfg.n_agents, dtype=jnp.int32)
+
+
+def _can_local(wl, s: PCState):
+    lanes = _lanes(wl.cfg)
+    live = jnp.any(s.consumed < s.quota)
+    return jnp.where(lanes == 0, (s.credit > 0) & live, s.produced < s.quota)
+
+
+def _can_remote(wl, s: PCState):
+    lanes = _lanes(wl.cfg)
+    live = jnp.any(s.consumed < s.quota)
+    return (lanes == 0) & (s.credit == 0) & live
+
+
+def _remote_bound(wl, s: PCState):
+    lanes = _lanes(wl.cfg)
+    return jnp.where(lanes == 0,
+                     s.credit.astype(jnp.float32) * wl.cfg.scratch_cost,
+                     harness.BIG)
+
+
+def _live(wl, s: PCState):
+    return jnp.any(s.consumed < s.quota) & (s.rounds < _max_events(wl.cfg))
+
+
+def _local_turn(wl, s: PCState, mask) -> PCState:
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    lanes = _lanes(cfg)
+    is0 = lanes == 0
+    prod = mask & ~is0
+    cons = mask & is0
+    locks = lanes * cfg.stride
+
+    st = s.store
+    # producers: append inside own critical section (local-scope sync)
+    st, _ = wl.proto.owner_acquire_b(pc, st, prod, locks, 0, 1)
+    slot = jnp.clip(s.produced, 0, cfg.max_items - 1)
+    st, _ = P.b_store_word(pc, st, prod, locks + 2 + slot,
+                           _item_val(lanes, s.produced))
+    st, _ = P.b_store_word(pc, st, prod, locks + 1, s.produced + 1)
+    st = wl.proto.owner_release_b(pc, st, prod, locks, 0)
+    # consumer: scratch write in its own region (write-combining dirt)
+    st, _ = P.b_store_word(pc, st, cons,
+                           locks + 2 + s.credit % jnp.int32(cfg.max_items),
+                           jnp.broadcast_to(s.credit, (cfg.n_agents,)))
+    st = harness.charge(st, mask, cfg.scratch_cost)
+
+    return PCState(
+        store=st,
+        produced=s.produced + prod.astype(jnp.int32),
+        consumed=s.consumed,
+        quota=s.quota,
+        credit=s.credit - cons[0].astype(jnp.int32),
+        sum_seen=s.sum_seen, sum_expect=s.sum_expect,
+        check_fails=s.check_fails,
+        rounds=s.rounds + jnp.sum(mask.astype(jnp.int32)))
+
+
+def _remote_turn(wl, s: PCState, wg) -> PCState:
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    do = _can_remote(wl, s)[wg]   # the scheduler's own predicate, in sync
+
+    def drain(s: PCState) -> PCState:
+        gap = (s.produced - s.consumed).at[0].set(-1)  # never self-drain
+        victim = jnp.argmax(gap).astype(jnp.int32)
+        lockv = victim * cfg.stride
+        start = s.consumed[victim]
+        end = s.produced[victim]
+
+        st = s.store
+        st, old = wl.proto.thief_acquire(pc, st, 0, lockv, 0, 1)
+        st, cnt = P.load(pc, st, 0, lockv + 1)
+        seen = jnp.int32(0)
+
+        def rd(carry, j):
+            st, seen = carry
+            st, v = P.load(pc, st, 0, lockv + 2 + j)
+            seen = seen + jnp.where((j >= start) & (j < end), v, 0)
+            return (st, seen), None
+
+        (st, seen), _ = lax.scan(rd, (st, seen),
+                                 jnp.arange(cfg.max_items, dtype=jnp.int32))
+        st = wl.proto.thief_release(pc, st, 0, lockv, 0)
+
+        m = end - start
+        # Σ_{j=start..end-1} item_val(victim, j), closed form
+        expect = m * ((victim + 1) * 131 + 1) + 7 * (start + end - 1) * m // 2
+        fails = (cnt != end).astype(jnp.int32) + (old != 0).astype(jnp.int32)
+        return PCState(
+            store=st,
+            produced=s.produced,
+            consumed=s.consumed.at[victim].set(end),
+            quota=s.quota,
+            credit=jnp.int32(cfg.warmup),
+            sum_seen=s.sum_seen + seen,
+            sum_expect=s.sum_expect + expect,
+            check_fails=s.check_fails + fails,
+            rounds=s.rounds + 1)
+
+    def idle(s: PCState) -> PCState:
+        return s._replace(rounds=s.rounds + 1)
+
+    return lax.cond(do, drain, idle, s)
+
+
+def build_workload(cfg: Config, proto: P.Protocol) -> harness.Workload:
+    return harness.Workload(
+        name="producer_consumer", cfg=cfg, proto=proto, has_remote=True,
+        can_local=_can_local, can_remote=_can_remote,
+        local_turn=_local_turn, remote_turn=_remote_turn,
+        remote_bound=_remote_bound, live=_live)
+
+
+def init_state(wl, seed) -> PCState:
+    """Pure-jnp init (vmappable over `seed`): per-producer quotas are
+    seed-jittered so replicas exercise different imbalance."""
+    cfg = wl.cfg
+    lanes = _lanes(cfg)
+    seed = jnp.asarray(seed, jnp.int32)
+    spread = cfg.max_items - cfg.min_items + 1
+    quota = cfg.min_items + jnp.mod(seed * 40503 + lanes * 1000003,
+                                    jnp.int32(spread))
+    quota = jnp.where(lanes == 0, 0, quota).astype(jnp.int32)
+    n = cfg.n_agents
+    return PCState(
+        store=P.make_store(cfg.proto_cfg()),
+        produced=jnp.zeros((n,), jnp.int32),
+        consumed=jnp.zeros((n,), jnp.int32),
+        quota=quota,
+        credit=jnp.int32(cfg.warmup),
+        sum_seen=jnp.int32(0), sum_expect=jnp.int32(0),
+        check_fails=jnp.int32(0), rounds=jnp.int32(0))
+
+
+def self_check(wl, final: PCState) -> dict:
+    """Consistency audit: in-run failures + drained-L2 lost-update scan."""
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    fails = int(final.check_fails)
+    fails += int(final.sum_seen != final.sum_expect)
+    done = bool(np.all(np.asarray(final.consumed) >=
+                       np.asarray(final.quota)))
+    st = harness.drain_all(pc, final.store)
+    l2 = np.asarray(st.l2).reshape(-1)
+    quota = np.asarray(final.quota)
+    for i in range(1, cfg.n_agents):
+        base = i * cfg.stride
+        if l2[base + 1] != quota[i]:
+            fails += 1
+        want = np.asarray(_item_val(i, np.arange(quota[i])))
+        fails += int(np.sum(l2[base + 2:base + 2 + quota[i]] != want))
+    return {"ok": fails == 0 and done, "check_fails": fails,
+            "done": done, "events": int(final.rounds)}
+
+
+def build(scenario: str, n_agents: int, seed: int = 0, *,
+          proto: P.Protocol = None, **kw) -> harness.Bench:
+    return harness.make_bench(Config(n_agents=n_agents, **kw),
+                              build_workload, init_state, self_check,
+                              scenario, seed, proto)

@@ -1,0 +1,221 @@
+"""Reader-heavy lock — one hot local writer, many rare remote readers.
+
+Asymmetry shape per *Asymmetry-aware Scalable Locking* (arXiv:2108.03355):
+a single writer updates a lock-protected multi-word payload at high rate
+with cheap local-scope synchronization; every other agent occasionally
+remote-acquires the same lock to read the payload.  Unlike work-stealing
+(many writers, roaming readers) the conflict object here is one global
+hot line, so promotion traffic concentrates on a single LR/PA-TBL entry.
+
+Spec (DESIGN.md §7):
+  * local turns: the writer's seqlock-style publish — acquire own lock,
+    store `writes_done+1` into every payload word, release; readers burn
+    scratch turns in their own regions between reads.  Writer region and
+    reader scratch regions are pairwise disjoint → local turns commute.
+  * remote turn: reader remote-acquires the writer's lock, reads all
+    payload words, releases.  The read is torn/stale-checked in-run:
+    every payload word must equal every other AND equal the bookkept
+    `writes_done` at the read's serial position (a correct remote acquire
+    forces the writer's released stores to L2 and invalidates the
+    reader's stale copies; a weakened one reads garbage).
+  * fence: reader i's next read is at least `credit[i] · scratch_cost`
+    cycles away; the writer never goes remote.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import protocol as P
+from repro.core.costmodel import CostParams
+from repro.workloads import harness
+
+VMAPPABLE = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    n_agents: int = 8
+    n_writes: int = 10          # writer publishes this many versions
+    reads_per_reader: int = 2
+    gap: int = 3                # reader scratch turns before each read
+    payload_w: int = 4          # payload words behind the lock
+    scratch_cost: float = 20.0
+    fifo_cap: int = 16
+    lr_cap: int = 8
+    pa_cap: int = 8
+    params: CostParams = dataclasses.field(default_factory=CostParams)
+
+    @property
+    def stride(self) -> int:
+        return 16
+
+    @property
+    def n_words(self) -> int:
+        return self.n_agents * self.stride
+
+    def proto_cfg(self) -> P.ProtoConfig:
+        return P.ProtoConfig(n_caches=self.n_agents, n_words=self.n_words,
+                             fifo_cap=self.fifo_cap, lr_cap=self.lr_cap,
+                             pa_cap=self.pa_cap, params=self.params)
+
+
+class RLState(NamedTuple):
+    store: P.Store
+    writes_done: jnp.ndarray  # [] i32 bookkeeping: versions published
+    reads_done: jnp.ndarray   # [n] i32 per-reader completed reads
+    credit: jnp.ndarray       # [n] i32 scratch turns before next read
+    gapv: jnp.ndarray         # [n] i32 per-reader (seed-jittered) gap
+    check_fails: jnp.ndarray  # [] i32
+    rounds: jnp.ndarray       # [] i32
+
+
+def _max_events(cfg: Config) -> int:
+    return cfg.n_writes + cfg.n_agents * cfg.reads_per_reader * (cfg.gap + 4) \
+        + 4 * cfg.n_agents
+
+
+def _lanes(cfg: Config):
+    return jnp.arange(cfg.n_agents, dtype=jnp.int32)
+
+
+def _can_local(wl, s: RLState):
+    cfg = wl.cfg
+    lanes = _lanes(cfg)
+    reader = (s.reads_done < cfg.reads_per_reader) & (s.credit > 0)
+    return jnp.where(lanes == 0, s.writes_done < cfg.n_writes, reader)
+
+
+def _can_remote(wl, s: RLState):
+    cfg = wl.cfg
+    lanes = _lanes(cfg)
+    return (lanes > 0) & (s.reads_done < cfg.reads_per_reader) \
+        & (s.credit == 0)
+
+
+def _remote_bound(wl, s: RLState):
+    lanes = _lanes(wl.cfg)
+    return jnp.where(lanes > 0,
+                     s.credit.astype(jnp.float32) * wl.cfg.scratch_cost,
+                     harness.BIG)
+
+
+def _live(wl, s: RLState):
+    cfg = wl.cfg
+    lanes = _lanes(cfg)
+    work = (s.writes_done < cfg.n_writes) \
+        | jnp.any((lanes > 0) & (s.reads_done < cfg.reads_per_reader))
+    return work & (s.rounds < _max_events(cfg))
+
+
+def _local_turn(wl, s: RLState, mask) -> RLState:
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    n = cfg.n_agents
+    lanes = _lanes(cfg)
+    is0 = lanes == 0
+    wmask = mask & is0
+    rmask = mask & ~is0
+    zeros = jnp.zeros((n,), jnp.int32)
+
+    st = s.store
+    # writer: publish version writes_done+1 to every payload word inside
+    # its own critical section (local-scope sync)
+    st, _ = wl.proto.owner_acquire_b(pc, st, wmask, zeros, 0, 1)
+    ver = jnp.broadcast_to(s.writes_done + 1, (n,))
+    for j in range(cfg.payload_w):
+        st, _ = P.b_store_word(pc, st, wmask, zeros + 2 + j, ver)
+    st = wl.proto.owner_release_b(pc, st, wmask, zeros, 0)
+    # readers: scratch write in their own regions
+    scr = lanes * cfg.stride + 2 + s.credit % jnp.int32(8)
+    st, _ = P.b_store_word(pc, st, rmask, scr, s.credit)
+    st = harness.charge(st, mask, cfg.scratch_cost)
+
+    return RLState(
+        store=st,
+        writes_done=s.writes_done + wmask[0].astype(jnp.int32),
+        reads_done=s.reads_done,
+        credit=s.credit - rmask.astype(jnp.int32),
+        gapv=s.gapv,
+        check_fails=s.check_fails,
+        rounds=s.rounds + jnp.sum(mask.astype(jnp.int32)))
+
+
+def _remote_turn(wl, s: RLState, wg) -> RLState:
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    do = _can_remote(wl, s)[wg]   # the scheduler's own predicate, in sync
+
+    def read(s: RLState) -> RLState:
+        st = s.store
+        st, old = wl.proto.thief_acquire(pc, st, wg, 0, 0, 1)
+        st, v0 = P.load(pc, st, wg, 2)
+        fails = (old != 0).astype(jnp.int32) \
+            + (v0 != s.writes_done).astype(jnp.int32)
+        for j in range(1, cfg.payload_w):
+            st, vj = P.load(pc, st, wg, 2 + j)
+            fails = fails + (vj != v0).astype(jnp.int32)  # torn read
+        st = wl.proto.thief_release(pc, st, wg, 0, 0)
+        return RLState(
+            store=st,
+            writes_done=s.writes_done,
+            reads_done=s.reads_done.at[wg].add(1),
+            credit=s.credit.at[wg].set(s.gapv[wg]),
+            gapv=s.gapv,
+            check_fails=s.check_fails + fails,
+            rounds=s.rounds + 1)
+
+    def idle(s: RLState) -> RLState:
+        return s._replace(rounds=s.rounds + 1)
+
+    return lax.cond(do, read, idle, s)
+
+
+def build_workload(cfg: Config, proto: P.Protocol) -> harness.Workload:
+    return harness.Workload(
+        name="reader_lock", cfg=cfg, proto=proto, has_remote=True,
+        can_local=_can_local, can_remote=_can_remote,
+        local_turn=_local_turn, remote_turn=_remote_turn,
+        remote_bound=_remote_bound, live=_live)
+
+
+def init_state(wl, seed) -> RLState:
+    cfg = wl.cfg
+    lanes = _lanes(cfg)
+    seed = jnp.asarray(seed, jnp.int32)
+    gapv = cfg.gap + jnp.mod(seed * 31 + lanes * 7, jnp.int32(3))
+    gapv = jnp.where(lanes == 0, 0, gapv).astype(jnp.int32)
+    n = cfg.n_agents
+    return RLState(
+        store=P.make_store(cfg.proto_cfg()),
+        writes_done=jnp.int32(0),
+        reads_done=jnp.zeros((n,), jnp.int32),
+        credit=gapv.copy(),  # distinct buffer: the state is donated
+        gapv=gapv,
+        check_fails=jnp.int32(0),
+        rounds=jnp.int32(0))
+
+
+def self_check(wl, final: RLState) -> dict:
+    """In-run torn/stale failures + drained-L2 final-version audit."""
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    fails = int(final.check_fails)
+    done = int(final.writes_done) >= cfg.n_writes and bool(
+        np.all(np.asarray(final.reads_done)[1:] >= cfg.reads_per_reader))
+    st = harness.drain_all(pc, final.store)
+    l2 = np.asarray(st.l2).reshape(-1)
+    fails += int(np.sum(l2[2:2 + cfg.payload_w] != cfg.n_writes))
+    return {"ok": fails == 0 and done, "check_fails": fails,
+            "done": done, "events": int(final.rounds)}
+
+
+def build(scenario: str, n_agents: int, seed: int = 0, *,
+          proto: P.Protocol = None, **kw) -> harness.Bench:
+    return harness.make_bench(Config(n_agents=n_agents, **kw),
+                              build_workload, init_state, self_check,
+                              scenario, seed, proto)

@@ -1,0 +1,131 @@
+"""Pluggable workload subsystem tests (ISSUE 2 acceptance).
+
+Three contracts per registered workload:
+
+1. **serial-vs-batched equivalence** — the batched scheduler's commute/
+   fence rules must reproduce the serial reference bitwise (every state
+   leaf, counters included), extending the worksteal equivalence suite's
+   pattern (tests/test_engine_equivalence.py) to the new specs.
+2. **self-check soundness** — each workload's consistency check is green
+   under the correct protocols (srsp/rsp/baseline).
+3. **self-check power** — a deliberately weakened protocol (remote
+   acquire skipping promotion — the bug class sRSP exists to prevent)
+   must be CAUGHT by every workload's check, and scope_only (local-scope
+   remote ops, the paper's staleness demo) must be caught by every
+   workload with remote turns.
+
+Plus the vmapped many-replica runner the sweep uses: every lane of
+`run_batched_many` must equal its solo `run_batched` run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import workloads
+from repro.core import protocol as P
+from repro.workloads import faults, harness
+
+NEW_WORKLOADS = ["producer_consumer", "reader_lock", "kv_directory"]
+N_AGENTS = 4
+SEED = 3
+
+
+def _run(name, scenario, engine, seed=SEED, proto=None):
+    """Fresh state per run: harness entry points donate their input."""
+    b = workloads.get(name).build(scenario, N_AGENTS, seed=seed, proto=proto)
+    final = harness.runner(engine)(b.wl, b.state, *b.ops)
+    return final, b.check
+
+
+def _assert_bitwise_equal(a, b, ctx):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=str(ctx))
+
+
+@pytest.mark.parametrize("name", NEW_WORKLOADS)
+def test_serial_batched_bitwise_equivalent(name):
+    ser, check = _run(name, "srsp", "serial")
+    bat, _ = _run(name, "srsp", "batched")
+    _assert_bitwise_equal(ser, bat, (name, "srsp"))
+    assert check(ser)["ok"], name
+    jax.clear_caches()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", NEW_WORKLOADS)
+@pytest.mark.parametrize("scenario", ["rsp", "baseline"])
+def test_serial_batched_equivalent_other_scenarios(name, scenario):
+    ser, check = _run(name, scenario, "serial")
+    bat, _ = _run(name, scenario, "batched")
+    _assert_bitwise_equal(ser, bat, (name, scenario))
+    assert check(ser)["ok"], (name, scenario)
+    jax.clear_caches()
+
+
+@pytest.mark.parametrize("name", NEW_WORKLOADS)
+def test_weakened_protocol_is_caught(name):
+    """Remote acquire without promotion (faults.no_promotion) leaves the
+    owners' released writes stranded in their L1s; every workload's
+    self-check must flag the resulting stale reads."""
+    broken = faults.no_promotion(P.PROTOCOLS["srsp"])
+    final, check = _run(name, "srsp", "batched", proto=broken)
+    res = check(final)
+    assert not res["ok"], (name, res)
+    assert res["check_fails"] > 0, (name, res)
+    jax.clear_caches()
+
+
+@pytest.mark.slow
+def test_weakened_protocol_caught_by_worksteal_too():
+    final, check = _run("worksteal", "srsp", "batched",
+                        proto=faults.no_promotion(P.PROTOCOLS["srsp"]))
+    assert not check(final)["ok"]
+    jax.clear_caches()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", NEW_WORKLOADS)
+def test_scope_only_staleness_is_caught(name):
+    """Local-scope sync for remote ops is the paper's staleness demo —
+    the checks must see it."""
+    final, check = _run(name, "scope_only", "batched")
+    assert not check(final)["ok"], name
+    jax.clear_caches()
+
+
+def test_worksteal_bench_contract():
+    """The first registered workload drives through the same contract."""
+    b = workloads.get("worksteal").build("srsp", N_AGENTS, seed=0)
+    final = harness.run_batched(b.wl, b.state, *b.ops)
+    res = b.check(final)
+    assert res["ok"], res
+    assert float(final.store.counters.steals) > 0  # stealing really happened
+    jax.clear_caches()
+
+
+def test_vmapped_replicas_match_solo_runs():
+    m = workloads.get("kv_directory")
+    b = m.build("srsp", N_AGENTS, seed=0)
+    states = jax.vmap(lambda s: m.init_state(b.wl, s))(jnp.arange(2))
+    outs = harness.run_batched_many(b.wl, states)
+    for k in range(2):
+        solo = m.build("srsp", N_AGENTS, seed=k)
+        ref = harness.run_batched(solo.wl, solo.state)
+        lane = jax.tree.map(lambda x: x[k], outs)
+        # rounds may drift (finished replicas idle while stragglers run);
+        # everything observable must match bitwise
+        _assert_bitwise_equal(ref._replace(rounds=jnp.int32(0)),
+                              lane._replace(rounds=jnp.int32(0)), k)
+        assert m.self_check(solo.wl, lane)["ok"]
+    jax.clear_caches()
+
+
+def test_registry_lists_all_workloads():
+    names = workloads.available()
+    assert set(NEW_WORKLOADS) <= set(names)
+    assert "worksteal" in names
+    for n in names:
+        m = workloads.get(n)
+        assert hasattr(m, "build") and hasattr(m, "VMAPPABLE")
