@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all bench bench-full sweep
+.PHONY: test test-slow test-all bench bench-full sweep sweep-smoke
 
 # Tier-1: fast suite (slow-marked full-size sims excluded via pyproject addopts)
 test:
@@ -26,6 +26,19 @@ bench-full:
 	  --scenarios baseline steal_only rsp srsp --out BENCH_protocol_engine.json
 
 # Workload-subsystem sweep: protocol x workload x n_agents grid plus the
-# buffer-donation A/B -> BENCH_workloads.json (schema: benchmarks/SCHEMA.md)
+# donation and packed-metadata A/Bs -> BENCH_workloads.json
+# (schema: benchmarks/SCHEMA.md)
 sweep:
 	$(PYTHON) -m repro.workloads.sweep --out BENCH_workloads.json
+
+# CI smoke: 1 replica, n_agents=16 grid, no subprocess A/Bs — catches
+# sweep-schema regressions in PR instead of at bench time.  The output is
+# a scratch file; the committed BENCH_workloads.json comes from `make sweep`.
+sweep-smoke:
+	$(PYTHON) -m repro.workloads.sweep --sizes 16 --seeds 1 --iters 1 \
+	  --no-donation --no-pack-ab --out BENCH_workloads.smoke.json
+	$(PYTHON) -c "import json; d=json.load(open('BENCH_workloads.smoke.json')); \
+	  assert d['schema_version'] == 3 and d['runs'], d.get('schema_version'); \
+	  bad=[r for r in d['runs'] if not r['check_ok'] \
+	       and r['scenario'] != 'scope_only']; \
+	  assert not bad, bad; print('sweep smoke OK:', len(d['runs']), 'cells')"

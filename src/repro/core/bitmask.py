@@ -1,0 +1,110 @@
+"""Packed word-bitmask primitives (DESIGN.md §8).
+
+The protocol's per-word metadata planes (`wvalid`, `wdirty`) used to be
+boolean arrays of shape `[..., W]` — one byte per tracked word.  At
+n_wgs=256 those planes dominate the batched engine's in-loop scatter
+traffic (ROADMAP).  This module packs them 32 words per `uint32` lane:
+
+    boolean  [..., W]          1 byte / word
+    packed   [..., ceil(W/32)] 1 bit  / word
+
+Conventions (word-boundary rules, DESIGN.md §8):
+
+  * word offset `o` lives in lane `o // 32`, bit `o % 32` (LSB-first);
+  * the last lane of a row with `W % 32 != 0` is *ragged*: bits at
+    offsets >= W are padding and MUST stay zero.  Every producer here
+    preserves that invariant (`pack` zero-pads; set/clear only touch
+    offsets < W), so `any_set`/`popcount` never need a tail mask.
+
+Everything is pure jnp and shape-polymorphic over leading axes; the
+boolean reference semantics of each op is documented inline and pinned
+bitwise by the hypothesis property tests in tests/test_bitmask.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANE_BITS = 32
+
+
+def n_lanes(n_bits: int) -> int:
+    """Packed lanes needed for `n_bits` flags (static)."""
+    return (n_bits + LANE_BITS - 1) // LANE_BITS
+
+
+def zeros(shape: tuple, n_bits: int) -> jnp.ndarray:
+    """All-clear packed plane: boolean `jnp.zeros(shape + (n_bits,))`."""
+    return jnp.zeros(tuple(shape) + (n_lanes(n_bits),), jnp.uint32)
+
+
+def word_index(o) -> jnp.ndarray:
+    """Lane holding word offset `o` along the packed axis."""
+    return jnp.asarray(o, jnp.int32) >> 5
+
+
+def word_bit(o) -> jnp.ndarray:
+    """Single-bit uint32 mask for word offset `o` within its lane."""
+    return jnp.uint32(1) << (jnp.asarray(o, jnp.uint32) & jnp.uint32(31))
+
+
+def test_word(words: jnp.ndarray, o) -> jnp.ndarray:
+    """Boolean `flags[..., o]` given already-gathered lanes
+    `words = packed[..., word_index(o)]` (the caller's gather keeps the
+    protocol's fancy [lane, block] indexing out of this module)."""
+    return (words & word_bit(o)) != 0
+
+
+def pack(flags: jnp.ndarray) -> jnp.ndarray:
+    """[..., W] bool -> [..., n_lanes(W)] uint32 (LSB-first, zero-padded)."""
+    w = flags.shape[-1]
+    lanes = n_lanes(w)
+    pad = [(0, 0)] * (flags.ndim - 1) + [(0, lanes * LANE_BITS - w)]
+    grouped = jnp.pad(flags, pad).reshape(
+        flags.shape[:-1] + (lanes, LANE_BITS)).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    return jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack(packed: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """[..., L] uint32 -> [..., n_bits] bool (inverse of `pack`)."""
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits = (packed[..., :, None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * LANE_BITS,))
+    return flat[..., :n_bits].astype(bool)
+
+
+def get_bit(vec: jnp.ndarray, o) -> jnp.ndarray:
+    """Boolean `flags[o]` of a single packed row `vec [L]`."""
+    return test_word(vec[word_index(o)], o)
+
+
+def set_bit(vec: jnp.ndarray, o, on=True) -> jnp.ndarray:
+    """Packed row with `flags[o] |= on` (no-op where `on` is False)."""
+    mask = jnp.where(jnp.asarray(on, bool), word_bit(o), jnp.uint32(0))
+    return vec.at[word_index(o)].set(vec[word_index(o)] | mask)
+
+
+def clear_bit(vec: jnp.ndarray, o, off=True) -> jnp.ndarray:
+    """Packed row with `flags[o] &= ~off` (no-op where `off` is False)."""
+    mask = jnp.where(jnp.asarray(off, bool), word_bit(o), jnp.uint32(0))
+    return vec.at[word_index(o)].set(vec[word_index(o)] & ~mask)
+
+
+def any_set(packed: jnp.ndarray) -> jnp.ndarray:
+    """Boolean `jnp.any(flags, axis=-1)` per row."""
+    return jnp.any(packed != 0, axis=-1)
+
+
+def popcount_word(w: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane set-bit count (Hacker's Delight 5-2, branch-free)."""
+    w = jnp.asarray(w, jnp.uint32)
+    w = w - ((w >> 1) & jnp.uint32(0x55555555))
+    w = (w & jnp.uint32(0x33333333)) + ((w >> 2) & jnp.uint32(0x33333333))
+    w = (w + (w >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (w * jnp.uint32(0x01010101)) >> 24
+
+
+def popcount(packed: jnp.ndarray) -> jnp.ndarray:
+    """Integer `jnp.sum(flags, axis=-1)` per row (padding bits are zero
+    by invariant, so no tail correction is needed)."""
+    return jnp.sum(popcount_word(packed), axis=-1, dtype=jnp.int32)

@@ -9,13 +9,23 @@ ops instead of per-word dynamic slices:
 
     Store.l2      [n_blocks, block_words]            word values at L2
     Store.l1      [n_caches, n_blocks, block_words]  per-cache cached values
-    Store.wvalid  [n_caches, n_blocks, block_words]  local copy is readable
-    Store.wdirty  [n_caches, n_blocks, block_words]  local copy not written back
+    Store.wvalid  [n_caches, n_blocks, ceil(W/32)]   local copy is readable
+    Store.wdirty  [n_caches, n_blocks, ceil(W/32)]   local copy not written back
     Store.fifo    batched SFifo        dirty-block FIFO  (QuickRelease)
-    Store.lr      batched LRTbl        sRSP local-release table
-    Store.pa      batched PATbl        sRSP promoted-acquire table
+    Store.lr      batched LRTbl        sRSP local-release table (set-assoc)
+    Store.pa      batched PATbl        sRSP promoted-acquire table (set-assoc)
 
 A flat word address `addr` maps to (addr // block_words, addr % block_words).
+
+The per-word metadata planes `wvalid`/`wdirty` are **packed uint32
+word-bitmasks** (`core/bitmask.py`, DESIGN.md §8): bit `o % 32` of lane
+`o // 32` tracks block offset `o`, so the planes carry 1 bit per word
+instead of the boolean layout's byte — the in-loop scatters that bound the
+batched engine at n_wgs=256 shrink with them.  `REPRO_NO_PACK=1` (read
+once at import, mirroring REPRO_NO_DONATE) falls back to the boolean
+`[n_caches, n_blocks, W]` layout; the sweep A/B-tests the two in
+subprocesses.  All plane access goes through the `_pl_*`/`_rows_*`
+helpers below, which are the only layout-aware code.
 
 All operations are pure `(store, ...) -> (store', ...)` functions and fully
 jittable; the cost model charges cycles/L2-transactions as a side channel in
@@ -43,6 +53,7 @@ is present in that cache's sFIFO, so a FIFO drain is a complete flush.
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import NamedTuple, Tuple
 
@@ -50,12 +61,17 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import sfifo, tables
+from repro.core import bitmask, sfifo, tables
 from repro.core.costmodel import CostParams, Counters, make_counters
 from repro.kernels.selective_flush.ops import drain_writeback
 
 INVALID = jnp.int32(-1)
 _DRAIN_ALL = jnp.int32(2**30)
+
+# Metadata layout toggle, read once at import (the jitted schedulers are
+# module-level, so the flag must be process-wide; the sweep A/Bs it in
+# subprocesses).  Default: packed uint32 word-bitmasks (DESIGN.md §8).
+PACKED = os.environ.get("REPRO_NO_PACK", "0") != "1"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,20 +80,26 @@ class ProtoConfig:
     n_words: int
     block_words: int = 16      # 64B block / 4B word (Table 1)
     fifo_cap: int = 16         # L1 sFIFO entries (Table 1)
-    lr_cap: int = 8
-    pa_cap: int = 8
+    lr_tbl: tables.TableGeometry = tables.LR_GEOMETRY   # sets × ways
+    pa_tbl: tables.TableGeometry = tables.PA_GEOMETRY   # sets × ways
     params: CostParams = dataclasses.field(default_factory=CostParams)
 
     @property
     def n_blocks(self) -> int:
         return (self.n_words + self.block_words - 1) // self.block_words
 
+    @property
+    def meta_lanes(self) -> int:
+        """Last-axis extent of the wvalid/wdirty planes in this layout."""
+        return bitmask.n_lanes(self.block_words) if PACKED \
+            else self.block_words
+
 
 class Store(NamedTuple):
     l2: jnp.ndarray        # [n_blocks, W]
     l1: jnp.ndarray        # [n_caches, n_blocks, W]
-    wvalid: jnp.ndarray    # [n_caches, n_blocks, W]
-    wdirty: jnp.ndarray    # [n_caches, n_blocks, W]
+    wvalid: jnp.ndarray    # [n_caches, n_blocks, meta_lanes] (see PACKED)
+    wdirty: jnp.ndarray    # [n_caches, n_blocks, meta_lanes]
     fifo: sfifo.SFifo      # leaves have leading [n_caches]
     lr: tables.LRTbl
     pa: tables.PATbl
@@ -86,15 +108,17 @@ class Store(NamedTuple):
 
 def make_store(cfg: ProtoConfig) -> Store:
     n, nb, w = cfg.n_caches, cfg.n_blocks, cfg.block_words
+    plane = jnp.zeros((n, nb, cfg.meta_lanes),
+                      jnp.uint32 if PACKED else jnp.bool_)
     stack = lambda t: jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), t)
     return Store(
         l2=jnp.zeros((nb, w), jnp.int32),
         l1=jnp.zeros((n, nb, w), jnp.int32),
-        wvalid=jnp.zeros((n, nb, w), bool),
-        wdirty=jnp.zeros((n, nb, w), bool),
+        wvalid=plane,
+        wdirty=plane.copy(),
         fifo=stack(sfifo.make(cfg.fifo_cap)),
-        lr=stack(tables.lr_make(cfg.lr_cap)),
-        pa=stack(tables.pa_make(cfg.pa_cap)),
+        lr=stack(tables.lr_make(cfg.lr_tbl)),
+        pa=stack(tables.pa_make(cfg.pa_tbl)),
         counters=make_counters(n),
     )
 
@@ -142,6 +166,72 @@ def _fill(cfg: ProtoConfig, val):
 
 
 # --------------------------------------------------------------------------
+# metadata-plane access — the ONLY layout-aware code (packed vs boolean)
+# --------------------------------------------------------------------------
+
+def _pl_get(plane, lane, b, o):
+    """Per-lane flag read: flags[lane, b, o] -> bool [n]."""
+    if PACKED:
+        return bitmask.test_word(plane[lane, b, bitmask.word_index(o)], o)
+    return plane[lane, b, o]
+
+
+def _pl_set(plane, lane, b, o, on):
+    """Per-lane flag OR: flags[lane, b, o] |= on (lanes with on=False keep
+    their value; (lane, b) pairs are distinct, so the scatter is safe)."""
+    if PACKED:
+        w = bitmask.word_index(o)
+        mask = jnp.where(jnp.asarray(on, bool), bitmask.word_bit(o),
+                         jnp.uint32(0))
+        return plane.at[lane, b, w].set(plane[lane, b, w] | mask)
+    return plane.at[lane, b, o].set(plane[lane, b, o] | on)
+
+
+def _pl_clear(plane, lane, b, o, off):
+    """Per-lane flag clear: flags[lane, b, o] &= ~off."""
+    if PACKED:
+        w = bitmask.word_index(o)
+        mask = jnp.where(jnp.asarray(off, bool), bitmask.word_bit(o),
+                         jnp.uint32(0))
+        return plane.at[lane, b, w].set(plane[lane, b, w] & ~mask)
+    return plane.at[lane, b, o].set(plane[lane, b, o] & ~off)
+
+
+def _rows_where(g, rows):
+    """Row select under a guard: rows where g[...] else all-clear.  Works
+    on boolean [..., W] and packed [..., L] rows alike."""
+    return jnp.where(g[..., None], rows, jnp.zeros((), rows.dtype))
+
+
+def _rows_any(rows):
+    """Per-row any-flag-set; layout-independent (bool != 0 is identity)."""
+    return jnp.any(rows != 0, axis=-1)
+
+
+def plane_scatter_set(plane, lane, b, o):
+    """Bulk flag OR over index triples (the write-combining bulk-store
+    path, e.g. worksteal's enqueue scatter).  Triples must be distinct;
+    out-of-range b drops.  Packed lanes accumulate by add, which equals OR
+    exactly because each (lane, b, o) bit appears at most once."""
+    if PACKED:
+        pattern = jnp.zeros_like(plane).at[
+            lane, b, bitmask.word_index(o)].add(bitmask.word_bit(o),
+                                                mode="drop")
+        return plane | pattern
+    return plane.at[lane, b, o].set(True, mode="drop")
+
+
+def wvalid_bool(st: Store) -> jnp.ndarray:
+    """Boolean [n_caches, n_blocks, W] view of wvalid (tests/debug)."""
+    return bitmask.unpack(st.wvalid, st.l1.shape[-1]) if PACKED else st.wvalid
+
+
+def wdirty_bool(st: Store) -> jnp.ndarray:
+    """Boolean [n_caches, n_blocks, W] view of wdirty (tests/debug)."""
+    return bitmask.unpack(st.wdirty, st.l1.shape[-1]) if PACKED else st.wdirty
+
+
+# --------------------------------------------------------------------------
 # batched block writeback / drain core  (önbellek-temizleme machinery, §2.2)
 # --------------------------------------------------------------------------
 
@@ -157,13 +247,13 @@ def b_writeback(cfg: ProtoConfig, st: Store, blks, guard) -> Tuple[Store, jnp.nd
     g = jnp.asarray(guard, bool) & (blks >= 0)
     safe = jnp.clip(blks, 0)
     rows = st.l1[jnp.arange(n), safe]                       # [n, W]
-    dirty_rows = st.wdirty[jnp.arange(n), safe]             # [n, W]
-    sel = dirty_rows & g[:, None]
+    dirty_rows = st.wdirty[jnp.arange(n), safe]             # [n, L]
+    sel = _rows_where(g, dirty_rows)
     idx = jnp.where(g, safe, nb)
     l2 = drain_writeback(st.l2, rows, sel, idx)
     wdirty = st.wdirty.at[jnp.arange(n), idx].set(
         dirty_rows & ~sel, mode="drop")
-    did = jnp.any(sel, axis=1).astype(jnp.float32)
+    did = _rows_any(sel).astype(jnp.float32)
     tot = jnp.sum(did)
     c = st.counters
     c = c._replace(l2_accesses=c.l2_accesses + tot, wb_blocks=c.wb_blocks + tot)
@@ -187,15 +277,15 @@ def b_drain(cfg: ProtoConfig, st: Store, pos, charge) -> Tuple[Store, jnp.ndarra
     safe = jnp.clip(drained, 0)
     crow = jnp.broadcast_to(jnp.arange(n)[:, None], (n, cap))
     rows = st.l1[crow, safe]                                    # [n, cap, W]
-    dirty_rows = st.wdirty[crow, safe] & g[..., None]
+    dirty_rows = _rows_where(g, st.wdirty[crow, safe])          # [n, cap, L]
     idx = jnp.where(g, drained, nb)
     # cache-major flatten: later caches override earlier on (racy) collisions
     l2 = drain_writeback(st.l2, rows.reshape(n * cap, W),
-                         dirty_rows.reshape(n * cap, W),
+                         dirty_rows.reshape(n * cap, dirty_rows.shape[-1]),
                          idx.reshape(n * cap))
     wdirty = st.wdirty.at[crow, idx].set(
         st.wdirty[crow, safe] & ~dirty_rows, mode="drop")
-    did = jnp.any(dirty_rows, axis=-1)                          # [n, cap]
+    did = _rows_any(dirty_rows)                                 # [n, cap]
     n_wb = jnp.sum(did, axis=1).astype(jnp.float32)
     tot = jnp.sum(n_wb)
     p = cfg.params
@@ -213,9 +303,12 @@ def b_invalidate(cfg: ProtoConfig, st: Store, mask) -> Store:
     (§2.2), flash-invalidate, clear LR-TBL and PA-TBL (§4.4)."""
     mask = jnp.asarray(mask, bool)
     st, _ = b_drain(cfg, st, jnp.where(mask, _DRAIN_ALL, INVALID), mask)
-    wvalid = jnp.where(mask[:, None, None], False, st.wvalid)
-    lr = _mask_tree_rows(mask, jax.vmap(tables.lr_clear)(st.lr), st.lr)
-    pa = _mask_tree_rows(mask, jax.vmap(tables.pa_clear)(st.pa), st.pa)
+    wvalid = jnp.where(mask[:, None, None],
+                       jnp.zeros((), st.wvalid.dtype), st.wvalid)
+    # geometry-deriving resets (full_like on the live tables): a custom
+    # TableGeometry survives every invalidate
+    lr = _mask_tree_rows(mask, jax.vmap(tables.lr_reset)(st.lr), st.lr)
+    pa = _mask_tree_rows(mask, jax.vmap(tables.pa_reset)(st.pa), st.pa)
     p = cfg.params
     fmask = mask.astype(jnp.float32)
     c = st.counters
@@ -274,10 +367,10 @@ def b_load(cfg: ProtoConfig, st: Store, active, addrs
     active = jnp.asarray(active, bool)
     b, o = _split(cfg, addrs)
     lane = jnp.arange(n)
-    hit = st.wvalid[lane, b, o]
+    hit = _pl_get(st.wvalid, lane, b, o)
     val = jnp.where(hit, st.l1[lane, b, o], st.l2[b, o])
     l1 = st.l1.at[lane, b, o].set(jnp.where(active, val, st.l1[lane, b, o]))
-    wvalid = st.wvalid.at[lane, b, o].set(st.wvalid[lane, b, o] | active)
+    wvalid = _pl_set(st.wvalid, lane, b, o, active)
     p = cfg.params
     miss = active & ~hit
     c = st.counters
@@ -303,8 +396,8 @@ def b_store_word(cfg: ProtoConfig, st: Store, active, addrs, vals,
     lane = jnp.arange(n)
     l1 = st.l1.at[lane, b, o].set(
         jnp.where(active, jnp.asarray(vals, jnp.int32), st.l1[lane, b, o]))
-    wvalid = st.wvalid.at[lane, b, o].set(st.wvalid[lane, b, o] | active)
-    wdirty = st.wdirty.at[lane, b, o].set(st.wdirty[lane, b, o] | active)
+    wvalid = _pl_set(st.wvalid, lane, b, o, active)
+    wdirty = _pl_set(st.wdirty, lane, b, o, active)
     st = st._replace(l1=l1, wvalid=wvalid, wdirty=wdirty)
 
     ft = jnp.broadcast_to(jnp.asarray(force_tail, bool), (n,))
@@ -366,8 +459,8 @@ def b_atomic_l2(cfg, st: Store, active, addrs, expect, new, is_cas
     l2 = st.l2.at[jnp.where(write, b, nb), o].set(
         jnp.where(success, jnp.asarray(new, jnp.int32), cur), mode="drop")
     # local copy of this word is no longer authoritative
-    wvalid = st.wvalid.at[lane, b, o].set(st.wvalid[lane, b, o] & ~active)
-    wdirty = st.wdirty.at[lane, b, o].set(st.wdirty[lane, b, o] & ~active)
+    wvalid = _pl_clear(st.wvalid, lane, b, o, active)
+    wdirty = _pl_clear(st.wdirty, lane, b, o, active)
     p = cfg.params
     fact = active.astype(jnp.float32)
     c = st.counters
@@ -495,21 +588,31 @@ def _probe_and_selective_flush(cfg: ProtoConfig, st: Store, cid, addr) -> Store:
     """Broadcast a selective-flush(addr) probe via L2 to every L1 (§4.2 step
     2).  Only caches with an LR-TBL entry for addr drain — up to the
     recorded position — then move addr into their PA-TBL.  Everyone else
-    NACKs.  One vmapped table sweep + one masked drain-scatter; no scan."""
+    NACKs.  One vmapped table sweep + one masked drain-scatter; no scan.
+
+    Charging (DESIGN.md §2, refined): a NACKing cache pays only the LR-CAM
+    lookup (`tbl_lat`) — the probe is *filtered*, its L1 is never busied —
+    and the issuer collects the parallel NACKs in one hop instead of
+    serializing a wait per cache.  Only actual sharers charge flush time
+    (theirs, and the issuer's wait for their writebacks to land at L2).
+    This is the paper's scalability claim made literal: the rare remote
+    path costs O(actual sharers), not O(n_caches)."""
     p = cfg.params
     n = cfg.n_caches
     addr32 = jnp.asarray(addr, jnp.int32)
     ptrs = jax.vmap(tables.lr_lookup, in_axes=(0, None))(st.lr, addr32)
-    has = (ptrs >= 0) & (jnp.arange(n) != jnp.asarray(cid, jnp.int32))
-    st, n_wb = b_drain(cfg, st, jnp.where(has, ptrs, INVALID),
-                       jnp.ones((n,), bool))
+    others = jnp.arange(n) != jnp.asarray(cid, jnp.int32)
+    has = (ptrs >= 0) & others
+    st, n_wb = b_drain(cfg, st, jnp.where(has, ptrs, INVALID), has)
     lr2 = jax.vmap(tables.lr_remove, in_axes=(0, None))(st.lr, addr32)
     pa2 = jax.vmap(tables.pa_insert, in_axes=(0, None))(st.pa, addr32)
     st = st._replace(lr=_mask_tree_rows(has, lr2, st.lr),
                      pa=_mask_tree_rows(has, pa2, st.pa))
-    wait = jnp.sum(jnp.where(has, p.l2_lat + n_wb * p.wb_per_block, 1.0))
+    wait = jnp.sum(jnp.where(has, p.l2_lat + n_wb * p.wb_per_block, 0.0)) + 1.0
     c = st.counters
-    c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + p.l2_lat + wait),
+    nack = jnp.where(others & ~has, p.tbl_lat, 0.0)
+    c = c._replace(cycles=(c.cycles + nack).at[cid].add(
+                       p.probe_lat + p.l2_lat + wait),
                    probes=c.probes + jnp.float32(n - 1))
     return st._replace(counters=c)
 
@@ -539,7 +642,11 @@ def srsp_remote_acquire(cfg: ProtoConfig, st: Store, cid, addr, expect, new
 
 def srsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
     """atomic_ST_rem_rel_cmp under sRSP (§4.3): flush own cache, ST at L2,
-    broadcast selective-invalidate(addr) -> every PA-TBL records addr."""
+    broadcast selective-invalidate(addr) -> every PA-TBL records addr.
+
+    The broadcast's acks are collected in parallel (one hop for the
+    issuer); each receiving cache pays only the PA-CAM insert (`tbl_lat`)
+    — O(1) per cache, O(actual contention) for the issuer (DESIGN.md §2)."""
     p = cfg.params
     st, _ = drain_fifo_all(cfg, st, cid)
     st, _ = _atomic_l2(cfg, st, cid, addr, 0, val, False)
@@ -547,7 +654,9 @@ def srsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
         st.pa, jnp.asarray(addr, jnp.int32))
     st = st._replace(pa=pa)
     c = st.counters
-    c = c._replace(cycles=c.cycles.at[cid].add(p.probe_lat + cfg.n_caches * 1.0),
+    others = jnp.arange(cfg.n_caches) != jnp.asarray(cid, jnp.int32)
+    recv = jnp.where(others, p.tbl_lat, 0.0)
+    c = c._replace(cycles=(c.cycles + recv).at[cid].add(p.probe_lat + 1.0),
                    probes=c.probes + jnp.float32(cfg.n_caches),
                    remote_syncs=c.remote_syncs + 1.0)
     return st._replace(counters=c)

@@ -1,25 +1,37 @@
 """LR-TBL and PA-TBL — the two new hardware structures sRSP adds (paper §4).
 
 LR-TBL (Local-Release Table): small CAM mapping
-    sync-variable block address -> sFIFO position of the last local release.
+    sync-variable address -> sFIFO position of the last local release.
 A selective-flush probe consults it; only the cache holding an entry for the
 probed address drains its sFIFO up to the recorded position.
 
 PA-TBL (Promoted-Acquire Table): set of addresses whose *next* local-scope
 acquire must be promoted to global scope (paper §4.3/4.4).
 
+Both tables are **set-associative with per-address LRU aging** behind a
+`TableGeometry` (sets × ways) config — DESIGN.md §8.  An address maps to
+set `(addr >> 4) % sets` (sync variables are block-spaced, so the block
+index spreads); within a set, every insert/update refreshes the entry's
+age (`pa_probe` additionally refreshes on a read hit) and a full set
+evicts its least-recently-used way.
+
 Overflow policies (the paper sizes the tables small and does not specify
-overflow; we pick *conservative* policies that preserve the memory model —
-documented in DESIGN.md §2):
+overflow; DESIGN.md §8):
   * LR-TBL eviction returns the evicted (addr, ptr) so the protocol can
-    conservatively drain up to that position (no release record may be
-    silently dropped).
-  * PA-TBL overflow sets a sticky `promote_all` bit: every local acquire
-    promotes until the next full invalidation clears the tables.
+    conservatively drain up to that position — no release record is ever
+    silently dropped (memory-model preserving, as before).
+  * PA-TBL overflow evicts the set's coldest address *silently* instead of
+    the pre-geometry sticky global `promote_all` bit: promotion stays
+    selective under directory-shaped pressure (many one-shot remote locks),
+    at the cost of a bounded, aging-protected staleness window documented
+    in DESIGN.md §8 — hot entries are refreshed on every re-insert and
+    probe hit, so only addresses that are remotely released and then not
+    touched for `ways` same-set insertions can lose their promotion record.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import dataclasses
+from typing import NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -28,43 +40,88 @@ INVALID = jnp.int32(-1)
 _SEQ_MAX = jnp.int32(2**30)
 
 
+@dataclasses.dataclass(frozen=True)
+class TableGeometry:
+    """sets × ways layout of a CAM table.  `sets=1` is fully associative;
+    `ways=1` is direct-mapped.  Hashable so it can ride in the frozen
+    configs that key jit caches."""
+    sets: int = 1
+    ways: int = 8
+
+    @property
+    def capacity(self) -> int:
+        return self.sets * self.ways
+
+    def __str__(self) -> str:
+        return f"{self.sets}x{self.ways}"
+
+
+# defaults: LR keeps the historical capacity 8; PA grows to 32 entries so
+# directory-shaped broadcast storms evict cold entries instead of hot ones
+# (DESIGN.md §8 — a 32-entry CAM is still small hardware)
+LR_GEOMETRY = TableGeometry(sets=2, ways=4)
+PA_GEOMETRY = TableGeometry(sets=8, ways=4)
+
+
+def _as_geometry(g: Union[TableGeometry, int]) -> TableGeometry:
+    """Accept a bare capacity (legacy callers/tests) as fully associative."""
+    if isinstance(g, TableGeometry):
+        return g
+    return TableGeometry(sets=1, ways=int(g))
+
+
+def set_index(n_sets: int, addr) -> jnp.ndarray:
+    """Home set of `addr`: block index mod sets, at the paper's fixed
+    64B/16-word block granule (Table 1 — the same constant the workloads
+    bake into their strides/QMETA).  Sync variables are block-spaced in
+    every workload, so this spreads them; a ProtoConfig with a smaller
+    `block_words` would coarsen the distribution (adjacent sync blocks
+    sharing a set), not break correctness.  jnp.mod keeps negative
+    (INVALID) probes in range."""
+    return jnp.mod(jnp.asarray(addr, jnp.int32) >> 4, jnp.int32(n_sets))
+
+
 class LRTbl(NamedTuple):
-    addrs: jnp.ndarray  # [cap] int32, -1 free
-    ptrs: jnp.ndarray   # [cap] int32 sFIFO seq positions
-    ages: jnp.ndarray   # [cap] int32 insertion order (for FIFO eviction)
+    addrs: jnp.ndarray  # [sets, ways] int32, -1 free
+    ptrs: jnp.ndarray   # [sets, ways] int32 sFIFO seq positions
+    ages: jnp.ndarray   # [sets, ways] int32 last-touch order (LRU aging)
     next_age: jnp.ndarray  # [] int32
 
 
-def lr_make(capacity: int) -> LRTbl:
+def lr_make(geom: Union[TableGeometry, int] = LR_GEOMETRY) -> LRTbl:
+    g = _as_geometry(geom)
     return LRTbl(
-        addrs=jnp.full((capacity,), INVALID, jnp.int32),
-        ptrs=jnp.zeros((capacity,), jnp.int32),
-        ages=jnp.zeros((capacity,), jnp.int32),
+        addrs=jnp.full((g.sets, g.ways), INVALID, jnp.int32),
+        ptrs=jnp.zeros((g.sets, g.ways), jnp.int32),
+        ages=jnp.zeros((g.sets, g.ways), jnp.int32),
         next_age=jnp.int32(0),
     )
 
 
 def lr_insert(t: LRTbl, addr: jnp.ndarray, ptr: jnp.ndarray
               ) -> Tuple[LRTbl, jnp.ndarray, jnp.ndarray]:
-    """Insert or update addr -> ptr.  Returns (tbl', evicted_addr, evicted_ptr)."""
+    """Insert or update addr -> ptr in addr's set; refresh the entry's age.
+    Returns (tbl', evicted_addr, evicted_ptr) — the LRU victim's record
+    when the set was full (-1, -1 otherwise)."""
     addr = jnp.asarray(addr, jnp.int32)
-    valid = t.addrs >= 0
-    hit = (t.addrs == addr) & valid
+    s = set_index(t.addrs.shape[0], addr)
+    row_a, row_p, row_g = t.addrs[s], t.ptrs[s], t.ages[s]
+    valid = row_a >= 0
+    hit = (row_a == addr) & valid
     present = jnp.any(hit)
-    hit_idx = jnp.argmax(hit)
     free = ~valid
     any_free = jnp.any(free)
-    free_idx = jnp.argmax(free)
-    oldest_idx = jnp.argmin(jnp.where(valid, t.ages, _SEQ_MAX))
-    slot = jnp.where(present, hit_idx, jnp.where(any_free, free_idx, oldest_idx))
+    way = jnp.where(present, jnp.argmax(hit),
+                    jnp.where(any_free, jnp.argmax(free),
+                              jnp.argmin(jnp.where(valid, row_g, _SEQ_MAX))))
     evict = (~present) & (~any_free)
-    evicted_addr = jnp.where(evict, t.addrs[slot], INVALID)
-    evicted_ptr = jnp.where(evict, t.ptrs[slot], INVALID)
+    evicted_addr = jnp.where(evict, row_a[way], INVALID)
+    evicted_ptr = jnp.where(evict, row_p[way], INVALID)
     return (
         LRTbl(
-            addrs=t.addrs.at[slot].set(addr),
-            ptrs=t.ptrs.at[slot].set(jnp.asarray(ptr, jnp.int32)),
-            ages=t.ages.at[slot].set(t.next_age),
+            addrs=t.addrs.at[s, way].set(addr),
+            ptrs=t.ptrs.at[s, way].set(jnp.asarray(ptr, jnp.int32)),
+            ages=t.ages.at[s, way].set(t.next_age),
             next_age=t.next_age + 1,
         ),
         evicted_addr,
@@ -73,51 +130,100 @@ def lr_insert(t: LRTbl, addr: jnp.ndarray, ptr: jnp.ndarray
 
 
 def lr_lookup(t: LRTbl, addr: jnp.ndarray) -> jnp.ndarray:
-    """Return recorded sFIFO position for addr, or -1."""
-    hit = (t.addrs == addr) & (t.addrs >= 0)
-    return jnp.where(jnp.any(hit), t.ptrs[jnp.argmax(hit)], INVALID)
+    """Return recorded sFIFO position for addr, or -1 (read-only probe;
+    a protocol probe hit is always followed by lr_remove, so there is no
+    age to refresh)."""
+    addr = jnp.asarray(addr, jnp.int32)
+    s = set_index(t.addrs.shape[0], addr)
+    row = t.addrs[s]
+    hit = (row == addr) & (row >= 0)
+    return jnp.where(jnp.any(hit), t.ptrs[s][jnp.argmax(hit)], INVALID)
 
 
 def lr_remove(t: LRTbl, addr: jnp.ndarray) -> LRTbl:
-    hit = (t.addrs == addr) & (t.addrs >= 0)
-    return t._replace(addrs=jnp.where(hit, INVALID, t.addrs))
+    addr = jnp.asarray(addr, jnp.int32)
+    s = set_index(t.addrs.shape[0], addr)
+    row = t.addrs[s]
+    hit = (row == addr) & (row >= 0)
+    return t._replace(addrs=t.addrs.at[s].set(jnp.where(hit, INVALID, row)))
 
 
-def lr_clear(t: LRTbl) -> LRTbl:
+def lr_reset(t: LRTbl) -> LRTbl:
+    """Full clear, geometry derived from the *live* table (never from
+    config literals — a custom TableGeometry must survive resets)."""
     return t._replace(addrs=jnp.full_like(t.addrs, INVALID))
 
 
+lr_clear = lr_reset  # historical name
+
+
 class PATbl(NamedTuple):
-    addrs: jnp.ndarray        # [cap] int32, -1 free
-    promote_all: jnp.ndarray  # [] bool — sticky overflow bit
+    addrs: jnp.ndarray     # [sets, ways] int32, -1 free
+    ages: jnp.ndarray      # [sets, ways] int32 last-touch order (LRU aging)
+    next_age: jnp.ndarray  # [] int32
 
 
-def pa_make(capacity: int) -> PATbl:
+def pa_make(geom: Union[TableGeometry, int] = PA_GEOMETRY) -> PATbl:
+    g = _as_geometry(geom)
     return PATbl(
-        addrs=jnp.full((capacity,), INVALID, jnp.int32),
-        promote_all=jnp.asarray(False),
+        addrs=jnp.full((g.sets, g.ways), INVALID, jnp.int32),
+        ages=jnp.zeros((g.sets, g.ways), jnp.int32),
+        next_age=jnp.int32(0),
     )
 
 
 def pa_insert(t: PATbl, addr: jnp.ndarray) -> PATbl:
+    """Record addr in its set; re-insert refreshes the age (hot entries —
+    locks that keep getting remotely released — stay resident).  A full
+    set evicts its LRU way silently (DESIGN.md §8)."""
     addr = jnp.asarray(addr, jnp.int32)
-    valid = t.addrs >= 0
-    present = jnp.any((t.addrs == addr) & valid)
+    s = set_index(t.addrs.shape[0], addr)
+    row_a, row_g = t.addrs[s], t.ages[s]
+    valid = row_a >= 0
+    hit = (row_a == addr) & valid
+    present = jnp.any(hit)
     free = ~valid
     any_free = jnp.any(free)
-    free_idx = jnp.argmax(free)
-    do_insert = (~present) & any_free
-    overflow = (~present) & (~any_free)
-    addrs = jnp.where(do_insert, t.addrs.at[free_idx].set(addr), t.addrs)
-    return PATbl(addrs=addrs, promote_all=t.promote_all | overflow)
+    way = jnp.where(present, jnp.argmax(hit),
+                    jnp.where(any_free, jnp.argmax(free),
+                              jnp.argmin(jnp.where(valid, row_g, _SEQ_MAX))))
+    return PATbl(
+        addrs=t.addrs.at[s, way].set(addr),
+        ages=t.ages.at[s, way].set(t.next_age),
+        next_age=t.next_age + 1,
+    )
 
 
 def pa_contains(t: PATbl, addr: jnp.ndarray) -> jnp.ndarray:
-    """True if the next local acquire of addr must be promoted."""
-    hit = jnp.any((t.addrs == addr) & (t.addrs >= 0))
-    return hit | t.promote_all
+    """True if the next local acquire of addr must be promoted (pure hit
+    check — no global promote_all fallback anymore)."""
+    addr = jnp.asarray(addr, jnp.int32)
+    row = t.addrs[set_index(t.addrs.shape[0], addr)]
+    return jnp.any((row == addr) & (row >= 0))
 
 
-def pa_clear(t: PATbl) -> PATbl:
-    return PATbl(addrs=jnp.full_like(t.addrs, INVALID),
-                 promote_all=jnp.asarray(False))
+def pa_probe(t: PATbl, addr: jnp.ndarray) -> Tuple[PATbl, jnp.ndarray]:
+    """`pa_contains` that also refreshes the hit entry's age (LRU aging on
+    probe) — for acquire paths that would NOT consume the entry.  The
+    current engine always consumes a hit (promotion invalidates, which
+    resets the table), so `local_acquire_b` uses the pure `pa_contains`;
+    this is the aging API a non-consuming consumer would bind instead."""
+    addr = jnp.asarray(addr, jnp.int32)
+    s = set_index(t.addrs.shape[0], addr)
+    row = t.addrs[s]
+    hit = (row == addr) & (row >= 0)
+    present = jnp.any(hit)
+    ages = t.ages.at[s, jnp.argmax(hit)].set(
+        jnp.where(present, t.next_age, t.ages[s, jnp.argmax(hit)]))
+    return t._replace(ages=ages,
+                      next_age=t.next_age + present.astype(jnp.int32)), present
+
+
+def pa_reset(t: PATbl) -> PATbl:
+    """Full clear, geometry derived from the *live* table — never rebuilt
+    from default literals, so configured sets/ways survive every reset
+    (the invalidation path calls this on each full invalidate)."""
+    return t._replace(addrs=jnp.full_like(t.addrs, INVALID))
+
+
+pa_clear = pa_reset  # historical name

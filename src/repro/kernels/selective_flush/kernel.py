@@ -72,6 +72,23 @@ def _writeback_kernel(idx_ref, l2_ref, row_ref, dirty_ref, out_ref):
     out_ref[...] = jnp.where(sel, row_ref[...], base)
 
 
+def _writeback_kernel_packed(idx_ref, l2_ref, row_ref, dirty_ref, out_ref):
+    """`_writeback_kernel` with the dirty mask as packed uint32 word-bitmask
+    lanes (bit pattern carried as int32): the per-word mask is expanded
+    in-register — shift each lane across a 32-wide iota and take bit 0 —
+    so the DMA engine moves ceil(W/32) mask words per block, not W bytes."""
+    i = pl.program_id(0)
+    valid = idx_ref[i] >= 0
+    w = out_ref.shape[-1]
+    words = dirty_ref[...]                               # [1, L] bit lanes
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, words.shape[-1], 32), 2)
+    bits = (words[:, :, None] >> shifts) & 1             # arithmetic >> is
+    sel = (bits.reshape(1, -1)[:, :w] != 0) & valid      # bit-exact after &1
+    first = (i == 0) | (idx_ref[i] != idx_ref[jnp.maximum(i - 1, 0)])
+    base = jnp.where(first, l2_ref[...], out_ref[...])
+    out_ref[...] = jnp.where(sel, row_ref[...], base)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def drain_writeback_pallas(l2: jnp.ndarray, rows: jnp.ndarray,
                            dirty: jnp.ndarray, indices: jnp.ndarray,
@@ -87,10 +104,13 @@ def drain_writeback_pallas(l2: jnp.ndarray, rows: jnp.ndarray,
     sequential grid gives deterministic last-writer-wins merging for
     duplicate indices (same order as the jnp reference).
 
-    l2 [n_blocks, W]; rows [m, W]; dirty [m, W]; indices [m] int32 (-1 pad
-    entries write nothing).  Returns the merged [n_blocks, W] bank."""
+    l2 [n_blocks, W]; rows [m, W]; dirty [m, W] bool OR [m, ceil(W/32)]
+    packed uint32 word-bitmask rows (DESIGN.md §8 — expanded in-kernel by
+    `_writeback_kernel_packed`); indices [m] int32 (-1 pad entries write
+    nothing).  Returns the merged [n_blocks, W] bank."""
     n_blocks, block_size = l2.shape
     m = indices.shape[0]
+    packed = dirty.dtype != jnp.bool_
     safe = jnp.where((indices >= 0) & (indices < n_blocks), indices, -1)
     # group duplicate destinations into consecutive grid steps; the sort is
     # stable, so within a destination the original (priority) order survives
@@ -108,13 +128,13 @@ def drain_writeback_pallas(l2: jnp.ndarray, rows: jnp.ndarray,
             pl.BlockSpec((1, block_size),
                          lambda i, idx: (jnp.maximum(idx[i], 0), 0)),
             pl.BlockSpec((1, block_size), lambda i, idx: (i, 0)),
-            pl.BlockSpec((1, block_size), lambda i, idx: (i, 0)),
+            pl.BlockSpec((1, dirty.shape[-1]), lambda i, idx: (i, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_size),
                                lambda i, idx: (jnp.maximum(idx[i], 0), 0)),
     )
     return pl.pallas_call(
-        _writeback_kernel,
+        _writeback_kernel_packed if packed else _writeback_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blocks, block_size), l2.dtype),
         input_output_aliases={1: 0},   # l2 bank updated in place

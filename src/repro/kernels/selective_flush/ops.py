@@ -42,6 +42,11 @@ def drain_writeback(l2: jnp.ndarray, rows: jnp.ndarray, dirty: jnp.ndarray,
     """Merge drained L1 blocks into the L2 bank under a per-word dirty mask
     (the protocol engine's drain/writeback scatter — see protocol.b_drain).
 
+    `dirty` is either boolean [m, W] or packed uint32 word-bitmask rows
+    [m, ceil(W/32)] (DESIGN.md §8) — the packed form is what the packed
+    metadata engine passes straight from its wdirty plane; both kernel and
+    reference expand it themselves, so no caller ever unpacks.
+
     Dispatches to the Pallas scatter kernel on TPU; on CPU the jnp
     reference is both the validation oracle and the fast path (XLA fuses
     the scatter-max/gather pair), so interpret-mode Pallas is reserved for

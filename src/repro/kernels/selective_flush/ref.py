@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import bitmask
+
 
 def selective_flush_ref(bank: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
     """out[i] = bank[indices[i]] for indices[i] >= 0 else zeros.
@@ -39,6 +41,8 @@ def drain_writeback_ref(l2: jnp.ndarray, rows: jnp.ndarray,
     nb = l2.shape[0]
     m = indices.shape[0]
     g = (indices >= 0) & (indices < nb)
+    if dirty.dtype != jnp.bool_:       # packed uint32 word-bitmask rows
+        dirty = bitmask.unpack(dirty, l2.shape[1])
     sel = dirty & g[:, None]
     prio = jnp.where(sel, jnp.arange(1, m + 1, dtype=jnp.int32)[:, None], 0)
     owner = jnp.zeros(l2.shape, jnp.int32).at[

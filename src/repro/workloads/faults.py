@@ -37,3 +37,14 @@ def no_promotion(proto: P.Protocol) -> P.Protocol:
     return dataclasses.replace(
         proto, name=proto.name + "+no_promotion",
         thief_acquire=_skip_promotion_acquire)
+
+
+# On the set-associative PA-TBL's silent LRU eviction (DESIGN.md §8):
+# dropping only the *release-side* PA broadcast is NOT an observable fault
+# for the registered workloads — the probe already re-inserts the address
+# into every actual sharer's PA at acquire time, and non-sharers never
+# later local-acquire these locks (verified while building this module:
+# the workload checks stay green under that injection).  The observable
+# limiting case of a lossy PA table is promotion starvation at the
+# acquire, which `no_promotion` injects and every workload's check
+# catches (tests/test_workloads.py).

@@ -37,6 +37,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import protocol as P
+from repro.core import tables
 from repro.core.costmodel import CostParams
 from repro.workloads import harness
 
@@ -51,8 +52,8 @@ class Config:
     warmup: int = 3             # consumer scratch turns between drains
     scratch_cost: float = 20.0  # compute cycles charged per local turn
     fifo_cap: int = 16
-    lr_cap: int = 8
-    pa_cap: int = 8
+    lr_tbl: tables.TableGeometry = tables.LR_GEOMETRY
+    pa_tbl: tables.TableGeometry = tables.PA_GEOMETRY
     params: CostParams = dataclasses.field(default_factory=CostParams)
 
     @property
@@ -65,8 +66,8 @@ class Config:
 
     def proto_cfg(self) -> P.ProtoConfig:
         return P.ProtoConfig(n_caches=self.n_agents, n_words=self.n_words,
-                             fifo_cap=self.fifo_cap, lr_cap=self.lr_cap,
-                             pa_cap=self.pa_cap, params=self.params)
+                             fifo_cap=self.fifo_cap, lr_tbl=self.lr_tbl,
+                             pa_tbl=self.pa_tbl, params=self.params)
 
 
 class PCState(NamedTuple):

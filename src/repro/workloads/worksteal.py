@@ -42,7 +42,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import protocol as P
-from repro.core import costmodel, sfifo
+from repro.core import costmodel, sfifo, tables
 from repro.data.graphs import CSRGraph, collab_like
 from repro.workloads import harness
 
@@ -57,8 +57,8 @@ class WSConfig:
     chunk_cap: int = 32          # nodes per task chunk
     n_chunks_max: int = 512      # static bound on chunks per iteration
     fifo_cap: int = 16
-    lr_cap: int = 8
-    pa_cap: int = 8
+    lr_tbl: tables.TableGeometry = tables.LR_GEOMETRY
+    pa_tbl: tables.TableGeometry = tables.PA_GEOMETRY
     cold_factor: float = 1.0     # refill penalty scale after an invalidation
     params: costmodel.CostParams = dataclasses.field(default_factory=costmodel.CostParams)
 
@@ -82,8 +82,8 @@ class WSConfig:
 
     def proto_cfg(self) -> P.ProtoConfig:
         return P.ProtoConfig(n_caches=self.n_wgs, n_words=self.n_words,
-                             fifo_cap=self.fifo_cap, lr_cap=self.lr_cap,
-                             pa_cap=self.pa_cap, params=self.params)
+                             fifo_cap=self.fifo_cap, lr_tbl=self.lr_tbl,
+                             pa_tbl=self.pa_tbl, params=self.params)
 
 
 SCENARIOS = {
@@ -406,8 +406,8 @@ def _enqueue_jit(ws: WSConfig, oacq_b, orel_b, store: P.Store, enq_owner,
     ab, ao = addr // W, addr % W
     st = st._replace(
         l1=st.l1.at[enq_owner, ab, ao].set(chunk_ids + 1, mode="drop"),
-        wvalid=st.wvalid.at[enq_owner, ab, ao].set(True, mode="drop"),
-        wdirty=st.wdirty.at[enq_owner, ab, ao].set(True, mode="drop"))
+        wvalid=P.plane_scatter_set(st.wvalid, enq_owner, ab, ao),
+        wdirty=P.plane_scatter_set(st.wdirty, enq_owner, ab, ao))
     # record the task-word blocks in the sFIFO (write-combining path)
     first_blk = (locks + QMETA) // W
     no_tail = jnp.zeros((n,), bool)

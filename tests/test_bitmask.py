@@ -1,0 +1,145 @@
+"""Packed word-bitmask primitives vs the boolean reference (DESIGN.md §8).
+
+The packed `uint32` planes replace boolean per-word metadata throughout
+the protocol engine; these tests pin every primitive bitwise-equal to the
+boolean array semantics it encodes — including across uint32 word
+boundaries (W not divisible by 32) and the ragged-tail invariant (padding
+bits stay zero).  Property tests need hypothesis (CI installs it); the
+deterministic word-boundary cases below run everywhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitmask
+
+jax.config.update("jax_platform_name", "cpu")
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI always has it
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements.txt)")
+
+# widths straddling every boundary case: sub-word, exact word, word+1, multi
+WIDTHS = (1, 7, 31, 32, 33, 64, 80)
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+def test_pack_unpack_roundtrip(w):
+    rng = np.random.default_rng(w)
+    flags = jnp.asarray(rng.integers(0, 2, (3, w)).astype(bool))
+    packed = bitmask.pack(flags)
+    assert packed.shape == (3, bitmask.n_lanes(w))
+    assert packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(bitmask.unpack(packed, w)),
+                                  np.asarray(flags))
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+def test_ragged_tail_padding_stays_zero(w):
+    """Invariant: bits at offsets >= W are zero after pack and set_bit, so
+    any_set/popcount never need a tail mask."""
+    flags = jnp.ones((w,), bool)
+    packed = bitmask.pack(flags)
+    for o in range(w):
+        packed = bitmask.set_bit(packed, jnp.int32(o))
+    unused = bitmask.n_lanes(w) * 32 - w
+    if unused:
+        tail = int(np.asarray(packed)[-1])
+        assert tail < (1 << (32 - unused))  # high `unused` bits clear
+    assert int(bitmask.popcount(packed)) == w
+
+
+@pytest.mark.parametrize("w", WIDTHS)
+def test_set_clear_get_match_boolean_reference(w):
+    rng = np.random.default_rng(100 + w)
+    ref = np.zeros(w, bool)
+    vec = bitmask.zeros((), w)
+    for _ in range(40):
+        o = int(rng.integers(0, w))
+        op = int(rng.integers(0, 3))
+        cond = bool(rng.integers(0, 2))
+        if op == 0:
+            ref[o] |= cond
+            vec = bitmask.set_bit(vec, jnp.int32(o), cond)
+        elif op == 1:
+            ref[o] &= not cond
+            vec = bitmask.clear_bit(vec, jnp.int32(o), cond)
+        else:
+            assert bool(bitmask.get_bit(vec, jnp.int32(o))) == ref[o]
+    np.testing.assert_array_equal(np.asarray(bitmask.unpack(vec, w)), ref)
+    assert int(bitmask.popcount(vec)) == int(ref.sum())
+    assert bool(bitmask.any_set(vec)) == bool(ref.any())
+
+
+def test_word_index_and_bit_conventions():
+    """LSB-first, 32 bits per lane: offset o -> lane o//32, bit o%32."""
+    assert int(bitmask.word_index(jnp.int32(0))) == 0
+    assert int(bitmask.word_index(jnp.int32(31))) == 0
+    assert int(bitmask.word_index(jnp.int32(32))) == 1
+    assert int(bitmask.word_bit(jnp.int32(0))) == 1
+    assert int(bitmask.word_bit(jnp.int32(31))) == 1 << 31
+    assert int(bitmask.word_bit(jnp.int32(33))) == 2
+    words = jnp.asarray([0b101, 1 << 31], jnp.uint32)
+    assert bool(bitmask.test_word(words[0], jnp.int32(0)))
+    assert not bool(bitmask.test_word(words[0], jnp.int32(1)))
+    assert bool(bitmask.test_word(words[1], jnp.int32(31)))
+
+
+def test_popcount_word_exhaustive_patterns():
+    pats = jnp.asarray([0, 1, 0xFFFFFFFF, 0xAAAAAAAA, 0x80000000, 0x7],
+                       jnp.uint32)
+    got = [int(x) for x in np.asarray(bitmask.popcount_word(pats))]
+    assert got == [0, 1, 32, 16, 1, 3]
+
+
+if HAVE_HYPOTHESIS:
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(1, 80), st.integers(0, 2**32 - 1))
+    def test_pack_matches_reference_random(w, seed):
+        rng = np.random.default_rng(seed)
+        flags = rng.integers(0, 2, w).astype(bool)
+        packed = bitmask.pack(jnp.asarray(flags))
+        # independent bit-weight reference
+        want = np.zeros(bitmask.n_lanes(w), np.uint32)
+        for o in range(w):
+            if flags[o]:
+                want[o // 32] |= np.uint32(1 << (o % 32))
+        np.testing.assert_array_equal(np.asarray(packed), want)
+        np.testing.assert_array_equal(
+            np.asarray(bitmask.unpack(packed, w)), flags)
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(2, 70),
+           st.lists(st.tuples(st.integers(0, 2), st.integers(0, 69),
+                              st.booleans()), max_size=50))
+    def test_op_soup_matches_boolean_reference(w, ops):
+        """Random set/clear soup: the packed vector and a plain boolean
+        array must agree after every op, popcount and any_set included —
+        the exact obligations the wvalid/wdirty planes place on the
+        layout."""
+        ref = np.zeros(w, bool)
+        vec = bitmask.zeros((), w)
+        for op, o, cond in ops:
+            o = o % w
+            if op == 0:
+                ref[o] |= cond
+                vec = bitmask.set_bit(vec, jnp.int32(o), cond)
+            elif op == 1:
+                ref[o] &= not cond
+                vec = bitmask.clear_bit(vec, jnp.int32(o), cond)
+            else:
+                assert bool(bitmask.get_bit(vec, jnp.int32(o))) == ref[o]
+            assert int(bitmask.popcount(vec)) == int(ref.sum())
+            assert bool(bitmask.any_set(vec)) == bool(ref.any())
+        np.testing.assert_array_equal(np.asarray(bitmask.unpack(vec, w)),
+                                      ref)

@@ -68,7 +68,7 @@ CFG = P.ProtoConfig(n_caches=4, n_words=256)
 
 
 def _dirty_blocks(st, c):
-    return set(np.nonzero(np.asarray(st.wdirty[c]).any(axis=-1))[0])
+    return set(np.nonzero(np.asarray(P.wdirty_bool(st)[c]).any(axis=-1))[0])
 
 
 def _fifo_blocks(st, c):
@@ -110,7 +110,7 @@ def test_dirty_subset_of_fifo_survives_block_major_ops():
             assert _dirty_blocks(st, c) <= _fifo_blocks(st, c), (step, op, c)
     for c in range(n):
         st, _ = P.drain_fifo_all(CFG, st, c)
-    assert not bool(np.asarray(st.wdirty).any())
+    assert not bool(np.asarray(P.wdirty_bool(st)).any())
 
 
 def test_batched_ops_match_scalar_ops_single_lane():
@@ -156,6 +156,31 @@ def test_drain_writeback_pallas_matches_ref():
                                  interpret=True)
     want = drain_writeback_ref(l2, rows, dirty, jnp.asarray(idx))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_drain_writeback_packed_mask_matches_boolean():
+    """The packed uint32 word-bitmask dirty rows (DESIGN.md §8) must drive
+    the scatter identically to the boolean rows they encode — kernel and
+    jnp reference, including word-boundary lanes (W not divisible by 32)."""
+    from repro.core import bitmask
+    rng = np.random.default_rng(5)
+    for W in (16, 40):          # 1 lane ragged / 2 lanes ragged
+        nb, m = 16, 10
+        l2 = jnp.asarray(rng.integers(0, 100, (nb, W)), jnp.int32)
+        rows = jnp.asarray(rng.integers(100, 200, (m, W)), jnp.int32)
+        dirty = jnp.asarray(rng.integers(0, 2, (m, W)).astype(bool))
+        idx = np.full(m, -1, np.int32)
+        idx[:7] = rng.choice(nb, size=7, replace=False)
+        idx = jnp.asarray(idx)
+        packed = bitmask.pack(dirty)
+        want = drain_writeback_ref(l2, rows, dirty, idx)
+        np.testing.assert_array_equal(
+            np.asarray(drain_writeback_ref(l2, rows, packed, idx)),
+            np.asarray(want), err_msg=f"packed ref W={W}")
+        np.testing.assert_array_equal(
+            np.asarray(drain_writeback_pallas(l2, rows, packed, idx,
+                                              interpret=True)),
+            np.asarray(want), err_msg=f"packed pallas W={W}")
 
 
 def test_drain_writeback_duplicate_disjoint_dirty():

@@ -102,7 +102,7 @@ def test_same_cu_optimization():
 
 def _dirty_subset_of_fifo(st_) -> bool:
     """Invariant: every dirty word's block is in that cache's sFIFO."""
-    wd = np.asarray(st_.wdirty)           # block-major [n, n_blocks, W]
+    wd = np.asarray(P.wdirty_bool(st_))   # block-major [n, n_blocks, W]
     addrs = np.asarray(st_.fifo.addrs)
     for c in range(CFG.n_caches):
         blocks = set(np.nonzero(wd[c].any(axis=-1))[0])
@@ -134,7 +134,7 @@ def test_flush_completeness_invariant(ops):
     assert _dirty_subset_of_fifo(st_)
     for c in range(CFG.n_caches):
         st_, _ = P.drain_fifo_all(CFG, st_, c)
-    assert not bool(np.asarray(st_.wdirty).any())
+    assert not bool(np.asarray(P.wdirty_bool(st_)).any())
 
 
 @settings(max_examples=15, deadline=None)

@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install -r requirements.txt)")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import sfifo, tables
 
@@ -61,26 +63,30 @@ def test_drain_upto_prefix_only():
     assert int(sfifo.size(f)) == 2
 
 
-@settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 15), st.booleans()), max_size=40))
-def test_fifo_matches_python_model(ops):
-    """Random pushes (w/ and w/o force_tail) then drain_all == python deque."""
-    cap = 6
-    f = sfifo.make(cap)
-    model = []  # list of addrs in FIFO order
-    for addr, force in ops:
-        if addr in model:
-            if force:
-                model.remove(addr)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 15), st.booleans()),
+                    max_size=40))
+    def test_fifo_matches_python_model(ops):
+        """Random pushes (w/ and w/o force_tail) then drain_all == python
+        deque."""
+        cap = 6
+        f = sfifo.make(cap)
+        model = []  # list of addrs in FIFO order
+        for addr, force in ops:
+            if addr in model:
+                if force:
+                    model.remove(addr)
+                    model.append(addr)
+            else:
+                if len(model) == cap:
+                    model.pop(0)
                 model.append(addr)
-        else:
-            if len(model) == cap:
-                model.pop(0)
-            model.append(addr)
-        f, _, _ = sfifo.push(f, addr, force_tail=force)
-    f, drained, count = sfifo.drain_all(f)
-    got = [int(x) for x in np.asarray(drained)[:int(count)]]
-    assert got == model
+            f, _, _ = sfifo.push(f, addr, force_tail=force)
+        f, drained, count = sfifo.drain_all(f)
+        got = [int(x) for x in np.asarray(drained)[:int(count)]]
+        assert got == model
 
 
 def test_lr_insert_lookup_update():
@@ -97,29 +103,118 @@ def test_lr_eviction_returns_victim():
     t, _, _ = tables.lr_insert(t, 1, 10)
     t, _, _ = tables.lr_insert(t, 2, 20)
     t, ea, ep = tables.lr_insert(t, 3, 30)
-    assert (int(ea), int(ep)) == (1, 10)  # FIFO eviction
+    assert (int(ea), int(ep)) == (1, 10)  # LRU == FIFO when never re-touched
     assert int(tables.lr_lookup(t, 3)) == 30
 
 
-def test_pa_overflow_sets_promote_all():
-    t = tables.pa_make(2)
-    t = tables.pa_insert(t, 1)
-    t = tables.pa_insert(t, 2)
-    assert not bool(t.promote_all)
-    t = tables.pa_insert(t, 3)
-    assert bool(t.promote_all)
-    assert bool(tables.pa_contains(t, 99))  # everything promotes now
-    t = tables.pa_clear(t)
-    assert not bool(tables.pa_contains(t, 1))
+def test_lr_reinsert_refreshes_age():
+    """Per-address aging: re-recording a release protects the entry — the
+    LRU victim is the *coldest* address, not the first-inserted one."""
+    t = tables.lr_make(2)
+    t, _, _ = tables.lr_insert(t, 1, 10)
+    t, _, _ = tables.lr_insert(t, 2, 20)
+    t, _, _ = tables.lr_insert(t, 1, 11)      # refresh addr 1
+    t, ea, ep = tables.lr_insert(t, 3, 30)
+    assert (int(ea), int(ep)) == (2, 20)      # 2 is now the coldest
+    assert int(tables.lr_lookup(t, 1)) == 11
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.lists(st.integers(0, 9), max_size=20))
-def test_pa_contains_is_sound(addrs):
-    """pa_contains never returns False for an inserted address (conservative
-    overflow semantics — required for memory-model soundness)."""
-    t = tables.pa_make(4)
+def test_lr_sets_isolate_eviction():
+    """Set-associative: pressure on one set never evicts another set's
+    entries (set index = block id (addr>>4) mod sets)."""
+    t = tables.lr_make(tables.TableGeometry(sets=2, ways=1))
+    t, _, _ = tables.lr_insert(t, 0x10, 1)     # block 1 -> set 1
+    t, ea, _ = tables.lr_insert(t, 0x20, 2)    # block 2 -> set 0
+    assert int(ea) == -1                       # different set: no eviction
+    t, ea, ep = tables.lr_insert(t, 0x30, 3)   # block 3 -> set 1: evicts 0x10
+    assert (int(ea), int(ep)) == (0x10, 1)
+    assert int(tables.lr_lookup(t, 0x20)) == 2
+
+
+# ---------------------------------------------------------------------------
+# PA-TBL — set-associative LRU replaces the sticky promote_all bit
+# ---------------------------------------------------------------------------
+
+def test_pa_overflow_stays_selective():
+    """The directory-pressure pattern that used to trip sticky promote_all:
+    more distinct one-shot addresses than capacity.  Now the coldest entry
+    evicts and *unrelated* addresses still do NOT promote."""
+    geom = tables.TableGeometry(sets=2, ways=2)
+    t = tables.pa_make(geom)
+    addrs = [0x10, 0x20, 0x30, 0x40, 0x50, 0x60, 0x70]  # > capacity 4
     for a in addrs:
         t = tables.pa_insert(t, a)
-    for a in addrs:
-        assert bool(tables.pa_contains(t, a))
+    # most-recently-inserted addresses are still recorded ...
+    assert bool(tables.pa_contains(t, 0x70))
+    assert bool(tables.pa_contains(t, 0x60))
+    # ... and an address never inserted still does not promote (with the
+    # old sticky bit this returned True forever after overflow)
+    assert not bool(tables.pa_contains(t, 0x990))
+    t = tables.pa_reset(t)
+    assert not bool(tables.pa_contains(t, 0x70))
+
+
+def test_pa_lru_eviction_and_refresh():
+    """Aging: re-inserting (a lock remotely released again) refreshes the
+    entry, so overflow evicts the cold address, not the hot one."""
+    t = tables.pa_make(tables.TableGeometry(sets=1, ways=2))
+    t = tables.pa_insert(t, 0x10)
+    t = tables.pa_insert(t, 0x20)
+    t = tables.pa_insert(t, 0x10)   # refresh
+    t = tables.pa_insert(t, 0x30)   # evicts 0x20 (coldest)
+    assert bool(tables.pa_contains(t, 0x10))
+    assert bool(tables.pa_contains(t, 0x30))
+    assert not bool(tables.pa_contains(t, 0x20))
+
+
+def test_pa_probe_refreshes_on_hit():
+    """LRU aging on probe: pa_probe returns the hit AND protects the probed
+    entry from the next eviction."""
+    t = tables.pa_make(tables.TableGeometry(sets=1, ways=2))
+    t = tables.pa_insert(t, 0x10)
+    t = tables.pa_insert(t, 0x20)
+    t, hit = tables.pa_probe(t, 0x10)           # refresh by probe
+    assert bool(hit)
+    t, miss = tables.pa_probe(t, 0x990)
+    assert not bool(miss)
+    t = tables.pa_insert(t, 0x30)               # evicts 0x20, not probed 0x10
+    assert bool(tables.pa_contains(t, 0x10))
+    assert not bool(tables.pa_contains(t, 0x20))
+
+
+def test_reset_derives_geometry_from_live_table():
+    """pa_reset/lr_reset must rebuild from the live table, never default
+    literals — a configured TableGeometry survives resets/invalidations."""
+    geom = tables.TableGeometry(sets=4, ways=3)
+    pa = tables.pa_insert(tables.pa_make(geom), 0x10)
+    pa = tables.pa_reset(pa)
+    assert pa.addrs.shape == (geom.sets, geom.ways)
+    assert not bool(tables.pa_contains(pa, 0x10))
+    lr, _, _ = tables.lr_insert(tables.lr_make(geom), 0x10, 1)
+    lr = tables.lr_reset(lr)
+    assert lr.addrs.shape == (geom.sets, geom.ways)
+    assert int(tables.lr_lookup(lr, 0x10)) == -1
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(0, 9), max_size=20))
+    def test_pa_contains_sound_within_capacity(addrs):
+        """The `ways` most-recently-touched distinct addresses of any one
+        set are ALWAYS resident (LRU order) — in particular nothing is
+        silently dropped while a set has not overflowed."""
+        geom = tables.TableGeometry(sets=2, ways=4)
+        t = tables.pa_make(geom)
+        for a in addrs:
+            t = tables.pa_insert(t, a * 16)
+        per_set = {}
+        for a in addrs:  # replay: most-recent-distinct per set, newest first
+            s = (a * 16 >> 4) % geom.sets
+            lst = per_set.setdefault(s, [])
+            if a * 16 in lst:
+                lst.remove(a * 16)
+            lst.insert(0, a * 16)
+        for s, lst in per_set.items():
+            for a in lst[:geom.ways]:
+                assert bool(tables.pa_contains(t, a)), (addrs, s, a)

@@ -24,6 +24,7 @@ import pytest
 
 from repro import workloads
 from repro.core import protocol as P
+from repro.core import tables
 from repro.workloads import faults, harness
 
 NEW_WORKLOADS = ["producer_consumer", "reader_lock", "kv_directory"]
@@ -74,6 +75,21 @@ def test_weakened_protocol_is_caught(name):
     res = check(final)
     assert not res["ok"], (name, res)
     assert res["check_fails"] > 0, (name, res)
+    jax.clear_caches()
+
+
+@pytest.mark.parametrize("name", ["kv_directory", "reader_lock"])
+def test_tiny_pa_geometry_still_correct(name):
+    """Stress the silent-LRU PA eviction (DESIGN.md §8): with a 1×2 PA
+    table — two entries total — the self-checks must STAY green, because
+    the promotion record a local acquire needs is by construction the
+    most recently remotely-released (hottest) entry of its set, and the
+    probe re-inserts it on every remote acquire."""
+    geom = tables.TableGeometry(sets=1, ways=2)
+    b = workloads.get(name).build("srsp", N_AGENTS, seed=SEED, pa_tbl=geom)
+    final = harness.run_batched(b.wl, b.state, *b.ops)
+    res = b.check(final)
+    assert res["ok"], (name, res)
     jax.clear_caches()
 
 
