@@ -36,9 +36,17 @@ sweep:
 # a scratch file; the committed BENCH_workloads.json comes from `make sweep`.
 sweep-smoke:
 	$(PYTHON) -m repro.workloads.sweep --sizes 16 --seeds 1 --iters 1 \
-	  --no-donation --no-pack-ab --out BENCH_workloads.smoke.json
+	  --no-donation --no-pack-ab --remote-batch-sizes 16 \
+	  --out BENCH_workloads.smoke.json
 	$(PYTHON) -c "import json; d=json.load(open('BENCH_workloads.smoke.json')); \
-	  assert d['schema_version'] == 3 and d['runs'], d.get('schema_version'); \
+	  assert d['schema_version'] == 4 and d['runs'], d.get('schema_version'); \
 	  bad=[r for r in d['runs'] if not r['check_ok'] \
 	       and r['scenario'] != 'scope_only']; \
-	  assert not bad, bad; print('sweep smoke OK:', len(d['runs']), 'cells')"
+	  assert not bad, bad; \
+	  assert all(r['api'] == 'scoped' for r in d['runs']); \
+	  rb=[r for r in d['runs'] if r['remote_batch']]; \
+	  assert rb, 'no remote-batch-capable cell in the grid'; \
+	  ab=d['remote_batch_ab']; \
+	  assert ab and all(r['check_ok'] for r in ab), ab; \
+	  print('sweep smoke OK:', len(d['runs']), 'cells,', \
+	        len(rb), 'remote-batch cells')"

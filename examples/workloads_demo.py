@@ -1,12 +1,16 @@
 """Workload subsystem demo: every registered asymmetric-sharing workload
-under every protocol scenario, with modeled makespan, L2 traffic and the
-consistency self-check verdict.
+under every protocol scenario, with modeled makespan, L2 traffic, the
+consistency self-check verdict, and — per the scope-parametric ISA
+(DESIGN.md §9) — whether the workload×protocol pair co-schedules
+address-disjoint remote turns (`rbatch`).
 
   PYTHONPATH=src python examples/workloads_demo.py [--agents 8] [--seed 0]
 
-`scope_only` failing its self-check on remote-turn workloads is the
-point — local-scope sync is not remote-safe, which is why the paper
-needs promotion at all.
+Every workload issues its synchronization through `repro.core.ops`
+scoped dispatch; the scenario column is just a protocol-registry lookup
+(`harness.resolve_proto`).  `scope_only` failing its self-check on
+remote-turn workloads is the point — local-scope sync is not
+remote-safe, which is why the paper needs promotion at all.
 """
 import argparse
 
@@ -27,16 +31,21 @@ def main():
         mod = workloads.get(name)
         print(f"\n== {name} (n_agents={args.agents}) ==")
         print(f"{'scenario':12s} {'makespan':>10s} {'L2 acc':>8s} "
-              f"{'promos':>7s} {'inv':>5s} {'events':>7s} {'check':>6s}")
+              f"{'promos':>7s} {'inv':>5s} {'events':>7s} {'check':>6s} "
+              f"{'rbatch':>7s}")
         for scen in SCENARIOS:
             b = mod.build(scen, args.agents, seed=args.seed)
             final = harness.run_batched(b.wl, b.state, *b.ops)
             c = harness.counters_dict(final.store)
             res = b.check(final)
+            rbatch = (b.wl.remote_turn_b is not None
+                      and b.wl.remote_addr is not None
+                      and b.wl.proto.remote_batchable)
             print(f"{scen:12s} {c['makespan']:10.0f} {c['l2_accesses']:8.0f} "
                   f"{c['promotions']:7.0f} {c['inv_full']:5.0f} "
                   f"{res['events']:7d} "
-                  f"{'ok' if res['ok'] else 'FAIL':>6s}")
+                  f"{'ok' if res['ok'] else 'FAIL':>6s} "
+                  f"{'yes' if rbatch else '-':>7s}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,165 @@
+"""Scope-parametric synchronization ISA — one masked op surface.
+
+The paper's interface (§2.1) is an ISA of scoped atomics:
+`atomic_CAS_acq_wg`, `atomic_ST_rem_rel_cmp`, … — scope is an *operand*
+of the instruction, not a property of the caller.  This module is that
+surface for the simulated machine: four masked multi-agent entry points
+
+    acquire(proto, cfg, st, active, addrs, expect, new, scope=LOCAL)
+    release(proto, cfg, st, active, addrs, vals,        scope=LOCAL)
+    load(cfg, st, active, addrs,                        scope=LOCAL)
+    store(cfg, st, active, addrs, vals,                 scope=LOCAL)
+
+where `active` is an [n_caches] participation mask and `scope` is either
+a static Python int or a per-agent {LOCAL, REMOTE, GLOBAL} int array —
+one call can carry a mixed-scope bundle, e.g. owners acquiring at LOCAL
+scope while a thief acquires at REMOTE scope in the same instruction.
+
+Dispatch (DESIGN.md §9) goes into the *protocol's* per-scope op table —
+the scenario mapping (baseline realizes LOCAL as global sync, scope_only
+realizes REMOTE as unsafe local sync) lives entirely in the registered
+`Protocol` object, never in workload code.  REMOTE-scope lanes use the
+protocol's batched address-disjoint remote twin when it declares one
+(`Protocol.remote_batchable`); otherwise they fall back to the scalar
+serializing op, which supports at most ONE active remote lane per call —
+the harness never co-schedules remote turns without the capability.
+
+Data ops (`load`/`store`) accept `scope` for ISA uniformity but are
+scope-invariant in this memory model: ordinary accesses always route
+through the issuing agent's L1 (write-combining, no-allocate) and the
+scope of the *synchronization* ops alone decides when that data becomes
+visible remotely.  That asymmetry is the paper's point.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import protocol as P
+
+# Scope codes of the ISA.  LOCAL is wg ("local") scope, and both REMOTE
+# and GLOBAL are realizations of cmp ("global") scope visibility
+# (core/scopes.py): GLOBAL pays the full flush/invalidate on every op,
+# REMOTE is the paper's promoted flavor — cheap until a remote sharer
+# actually appears.  They are distinct ISA operands because protocols
+# translate them differently.
+LOCAL = 0    # own-L1 synchronization (atomic_*_wg)
+REMOTE = 1   # promoted cross-agent synchronization (atomic_*_rem_cmp)
+GLOBAL = 2   # heavyweight everyone-pays synchronization (atomic_*_cmp)
+
+SCOPES = (LOCAL, REMOTE, GLOBAL)
+SCOPE_NAMES = {LOCAL: "loc", REMOTE: "rem", GLOBAL: "glob"}
+
+
+def _check_static(scope: int) -> None:
+    if scope not in SCOPE_NAMES:
+        raise ValueError(f"unknown scope {scope!r}; "
+                         f"valid: {sorted(SCOPE_NAMES)} "
+                         f"(ops.LOCAL / ops.REMOTE / ops.GLOBAL)")
+
+
+def _bcast(x, n: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.asarray(x, jnp.int32), (n,))
+
+
+def _acquire_rem(proto: P.Protocol, cfg, st, rem, addrs, expect, new):
+    """REMOTE-scope acquire lanes: batched twin when the protocol declares
+    one, else the scalar serializing op (at most one active lane)."""
+    if proto.acquire_rem_b is not None:
+        return proto.acquire_rem_b(cfg, st, rem, addrs, expect, new)
+    n = cfg.n_caches
+    rem = jnp.asarray(rem, bool)
+    addrs32, expect, new = (_bcast(a, n) for a in (addrs, expect, new))
+    cid = jnp.argmax(rem).astype(jnp.int32)
+
+    def do(s):
+        return proto.acquire_rem(cfg, s, cid, addrs32[cid], expect[cid],
+                                 new[cid])
+
+    def skip(s):
+        return s, jnp.int32(0)
+
+    st, old_c = lax.cond(jnp.any(rem), do, skip, st)
+    lanes = jnp.arange(n, dtype=jnp.int32)
+    return st, jnp.where(lanes == cid, old_c, jnp.int32(0))
+
+
+def _release_rem(proto: P.Protocol, cfg, st, rem, addrs, vals):
+    if proto.release_rem_b is not None:
+        return proto.release_rem_b(cfg, st, rem, addrs, vals)
+    n = cfg.n_caches
+    rem = jnp.asarray(rem, bool)
+    addrs32, vals = (_bcast(a, n) for a in (addrs, vals))
+    cid = jnp.argmax(rem).astype(jnp.int32)
+    return lax.cond(
+        jnp.any(rem),
+        lambda s: proto.release_rem(cfg, s, cid, addrs32[cid], vals[cid]),
+        lambda s: s, st)
+
+
+def acquire(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
+            addrs, expect, new, scope=LOCAL):
+    """Scoped acquire, one per active agent: CAS(expect -> new) on
+    `addrs[i]` at `scope[i]` for every active lane i, through `proto`'s
+    translation of that scope.  Returns (store', old [n_caches]);
+    inactive lanes' old values are unspecified.
+
+    A static int `scope` compiles to exactly the one table entry; a
+    per-agent array dispatches each scope class masked (REMOTE lanes
+    must be address-disjoint — the harness's obligation)."""
+    addrs, expect, new = (_bcast(a, cfg.n_caches)
+                          for a in (addrs, expect, new))
+    if isinstance(scope, int):
+        _check_static(scope)
+        if scope == LOCAL:
+            return proto.acquire_loc_b(cfg, st, active, addrs, expect, new)
+        if scope == GLOBAL:
+            return proto.acquire_glob_b(cfg, st, active, addrs, expect, new)
+        return _acquire_rem(proto, cfg, st, active, addrs, expect, new)
+    scope = jnp.asarray(scope, jnp.int32)
+    active = jnp.asarray(active, bool)
+    loc = active & (scope == LOCAL)
+    rem = active & (scope == REMOTE)
+    glob = active & (scope == GLOBAL)
+    st, old_l = proto.acquire_loc_b(cfg, st, loc, addrs, expect, new)
+    st, old_g = proto.acquire_glob_b(cfg, st, glob, addrs, expect, new)
+    st, old_r = _acquire_rem(proto, cfg, st, rem, addrs, expect, new)
+    old = jnp.where(rem, old_r, jnp.where(glob, old_g, old_l))
+    return st, old
+
+
+def release(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
+            addrs, vals, scope=LOCAL):
+    """Scoped release, one per active agent: store `vals[i]` to
+    `addrs[i]` with release semantics at `scope[i]`.  Returns store'."""
+    addrs, vals = (_bcast(a, cfg.n_caches) for a in (addrs, vals))
+    if isinstance(scope, int):
+        _check_static(scope)
+        if scope == LOCAL:
+            return proto.release_loc_b(cfg, st, active, addrs, vals)
+        if scope == GLOBAL:
+            return proto.release_glob_b(cfg, st, active, addrs, vals)
+        return _release_rem(proto, cfg, st, active, addrs, vals)
+    scope = jnp.asarray(scope, jnp.int32)
+    active = jnp.asarray(active, bool)
+    st = proto.release_loc_b(cfg, st, active & (scope == LOCAL), addrs, vals)
+    st = proto.release_glob_b(cfg, st, active & (scope == GLOBAL), addrs,
+                              vals)
+    return _release_rem(proto, cfg, st, active & (scope == REMOTE), addrs,
+                        vals)
+
+
+def load(cfg: P.ProtoConfig, st: P.Store, active, addrs, scope=LOCAL):
+    """Ordinary scoped read, one per active agent (scope-invariant: data
+    always routes through the issuing agent's L1 — module docstring)."""
+    if isinstance(scope, int):
+        _check_static(scope)
+    return P.b_load(cfg, st, active, addrs)
+
+
+def store(cfg: P.ProtoConfig, st: P.Store, active, addrs, vals,
+          scope=LOCAL, *, force_tail=False):
+    """Ordinary scoped write, one per active agent (scope-invariant)."""
+    if isinstance(scope, int):
+        _check_static(scope)
+    return P.b_store_word(cfg, st, active, addrs, vals, force_tail)

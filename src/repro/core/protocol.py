@@ -47,6 +47,14 @@ Two API layers (DESIGN.md §3):
     false sharing deterministically (highest cache id wins per word, which
     matches the serial engine's ascending-j drain order).
 
+Workload code should not bind these functions directly: the
+scope-parametric instruction layer `repro.core.ops`
+(`acquire/release/load/store(..., scope=LOCAL|REMOTE|GLOBAL)`,
+DESIGN.md §9) dispatches into a registered `Protocol`'s per-scope op
+table, including the batched address-disjoint remote twins
+(`srsp_remote_acquire_b`/`srsp_remote_release_b`) that let the harness
+co-schedule non-conflicting remote turns.
+
 Invariant maintained (checked by property tests): every dirty word's block
 is present in that cache's sFIFO, so a FIFO drain is a complete flush.
 """
@@ -54,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from functools import partial
 from typing import NamedTuple, Tuple
 
@@ -66,7 +75,11 @@ from repro.core.costmodel import CostParams, Counters, make_counters
 from repro.kernels.selective_flush.ops import drain_writeback
 
 INVALID = jnp.int32(-1)
-_DRAIN_ALL = jnp.int32(2**30)
+# Public drain-everything sentinel for the `pos` argument of the drain ops
+# (any seq is <= it, so the whole sFIFO drains).  `_DRAIN_ALL` is the
+# historical private alias.
+DRAIN_ALL = jnp.int32(2**30)
+_DRAIN_ALL = DRAIN_ALL
 
 # Metadata layout toggle, read once at import (the jitted schedulers are
 # module-level, so the flag must be process-wide; the sweep A/Bs it in
@@ -699,37 +712,294 @@ def rsp_remote_release(cfg: ProtoConfig, st: Store, cid, addr, val) -> Store:
 
 
 # --------------------------------------------------------------------------
+# batched remote twins — address-disjoint remote ops in one masked round
+# --------------------------------------------------------------------------
+
+def srsp_remote_acquire_b(cfg: ProtoConfig, st: Store, active, addrs, expect,
+                          new) -> Tuple[Store, jnp.ndarray]:
+    """Masked multi-issuer twin of `srsp_remote_acquire` (DESIGN.md §9).
+
+    One sRSP remote acquire per active lane in a single set of masked
+    array stages: all probe rounds share ONE vmapped LR sweep (an
+    [n_caches, n_lanes] lookup matrix) and all selective flushes merge
+    into one drain-scatter, instead of a serialized scan per issuer.
+
+    Bitwise-equal to serializing the active lanes in ascending order iff
+    the batch is **address-disjoint** (the caller's obligation, enforced
+    by the harness co-scheduling rule): active addrs pairwise distinct,
+    no cache holds LR state or dirty words for more than one batch
+    address, and no batch issuer holds LR state or dirty words for
+    another issuer's address.  A one-hot batch is trivially
+    address-disjoint and equals the scalar op exactly
+    (tests/test_ops.py)."""
+    p = cfg.params
+    n = cfg.n_caches
+    active = jnp.asarray(active, bool)
+    addrs32 = jnp.asarray(addrs, jnp.int32)
+    lanes = jnp.arange(n, dtype=jnp.int32)
+
+    # §4.2 fork, per lane: a local sharer on the same CU skips promotion
+    own_ptr = jax.vmap(tables.lr_lookup)(st.lr, addrs32)
+    same = active & (own_ptr >= 0)
+    cross = active & (own_ptr < 0)
+
+    # same-CU lanes: make own releases globally ordered, then CAS at L2
+    st, _ = b_drain(cfg, st, jnp.where(same, own_ptr, INVALID), same)
+    lr_rm = jax.vmap(tables.lr_remove)(st.lr, addrs32)
+    st = st._replace(lr=_mask_tree_rows(same, lr_rm, st.lr))
+
+    # cross-CU lanes: one probe round for the whole batch
+    ptrs = jax.vmap(lambda t: jax.vmap(
+        lambda a: tables.lr_lookup(t, a))(addrs32))(st.lr)   # [cache, lane]
+    probed = cross[None, :] & (lanes[:, None] != lanes[None, :])
+    has = (ptrs >= 0) & probed
+    sharer = jnp.any(has, axis=1)
+    drain_pos = jnp.max(jnp.where(has, ptrs, INVALID), axis=1)
+    st, n_wb = b_drain(cfg, st, jnp.where(sharer, drain_pos, INVALID), sharer)
+    # move each sharer's (unique, under disjointness) probed addr LR -> PA
+    shared_addr = addrs32[jnp.argmax(has, axis=1)]
+    lr2 = jax.vmap(tables.lr_remove)(st.lr, shared_addr)
+    pa2 = jax.vmap(tables.pa_insert)(st.pa, shared_addr)
+    st = st._replace(lr=_mask_tree_rows(sharer, lr2, st.lr),
+                     pa=_mask_tree_rows(sharer, pa2, st.pa))
+    # charging (DESIGN.md §2): a NACKing cache pays one CAM lookup per
+    # probe it filtered; each issuer waits for its own sharers only
+    nack = jnp.sum((probed & ~has).astype(jnp.float32), axis=1) * p.tbl_lat
+    wait = jnp.sum(jnp.where(has, (p.l2_lat + n_wb * p.wb_per_block)[:, None],
+                             0.0), axis=0) + 1.0
+    c = st.counters
+    c = c._replace(
+        cycles=c.cycles + nack
+        + jnp.where(cross, p.probe_lat + p.l2_lat + wait, 0.0),
+        probes=c.probes
+        + jnp.sum(cross.astype(jnp.float32)) * jnp.float32(n - 1))
+    st = st._replace(counters=c)
+
+    # own global-acquire part for promoting lanes, then CAS at L2 for all
+    st = b_invalidate(cfg, st, cross)
+    st, old = b_atomic_l2(cfg, st, active, addrs32, expect, new, True)
+    c = st.counters
+    return st._replace(counters=c._replace(
+        remote_syncs=c.remote_syncs
+        + jnp.sum(active.astype(jnp.float32)))), old
+
+
+def srsp_remote_release_b(cfg: ProtoConfig, st: Store, active, addrs,
+                          vals) -> Store:
+    """Masked multi-issuer twin of `srsp_remote_release` (DESIGN.md §9):
+    all active lanes flush their own caches in one drain-scatter and ST at
+    L2 in one masked atomic; the selective-invalidate broadcasts run as an
+    ascending-lane scan (PA ages are insertion-order sensitive), matching
+    the serialized order exactly.  Same address-disjointness obligation as
+    `srsp_remote_acquire_b`."""
+    p = cfg.params
+    n = cfg.n_caches
+    active = jnp.asarray(active, bool)
+    addrs32 = jnp.asarray(addrs, jnp.int32)
+    st, _ = b_drain(cfg, st, jnp.where(active, DRAIN_ALL, INVALID), active)
+    st, _ = b_atomic_l2(cfg, st, active, addrs32, 0, vals, False)
+
+    def ins(pa, xi):
+        a, on = xi
+        pa2 = jax.vmap(tables.pa_insert, in_axes=(0, None))(pa, a)
+        return jax.tree.map(lambda nw, od: jnp.where(on, nw, od), pa2, pa), None
+
+    pa, _ = lax.scan(ins, st.pa, (addrs32, active))
+    st = st._replace(pa=pa)
+    tot = jnp.sum(active.astype(jnp.float32))
+    recv = (tot - active.astype(jnp.float32)) * p.tbl_lat
+    c = st.counters
+    c = c._replace(cycles=c.cycles + recv
+                   + jnp.where(active, p.probe_lat + 1.0, 0.0),
+                   probes=c.probes + tot * jnp.float32(n),
+                   remote_syncs=c.remote_syncs + tot)
+    return st._replace(counters=c)
+
+
+# --------------------------------------------------------------------------
 # protocol bundles
 # --------------------------------------------------------------------------
 
+_DEPRECATION_WARNED: set = set()   # one warning per legacy name per process
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    if old not in _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED.add(old)
+        warnings.warn(
+            f"Protocol.{old} is deprecated; use Protocol.{new} or the "
+            f"scope-parametric surface in repro.core.ops "
+            f"(acquire/release(..., scope=LOCAL|REMOTE|GLOBAL))",
+            DeprecationWarning, stacklevel=3)
+
+
 @dataclasses.dataclass(frozen=True)
 class Protocol:
-    """The op table a scenario binds against (see worksteal.py).
+    """A registered scope-parametric op table (DESIGN.md §9).
 
-    The `*_b` members are the batched owner-side ops the vectorized
-    scheduler uses (active-mask signature); thief ops stay single-cache —
-    remote promotion broadcasts to every L1, so it cannot share a step."""
+    The paper's interface is an ISA of *scoped* atomics
+    (`atomic_*_loc/rem/glob`, §2.1); a Protocol is one translation of
+    that ISA onto the memory system — per scope, an acquire/release pair
+    in two forms: a **masked multi-agent** op (`*_b`, active-mask
+    signature — what both schedulers and `repro.core.ops` dispatch into)
+    and the scalar single-cache reference the protocol unit tests pin
+    against.  The mapping is the protocol's whole identity: `global`
+    realizes even LOCAL-scope requests as heavyweight global sync
+    (the paper's baseline), `local` realizes even REMOTE-scope requests
+    as unsafe local sync (the staleness demo), and rsp/srsp differ only
+    in their REMOTE realization (flush-everyone vs selective promotion).
+
+    Capability declaration: `acquire_rem_b`/`release_rem_b` are the
+    *batched address-disjoint remote twins*.  A protocol that carries
+    them (`remote_batchable`) lets the harness co-schedule
+    non-conflicting remote turns in one trip; protocols whose remote op
+    inherently touches every cache (original RSP) declare None and their
+    remote turns serialize, which is exactly the paper's scalability
+    distinction surfacing as an API capability.
+
+    Instances are looked up by name through the registry
+    (`get_protocol` / `protocols()`); `register_protocol` adds one.
+    Derived (e.g. fault-injected) protocols come from
+    `workloads.faults.derive` and stay unregistered.
+
+    The pre-redesign `owner_*`/`thief_*` attribute names remain as
+    deprecation shims (one `DeprecationWarning` per name)."""
     name: str
-    owner_acquire: callable   # (cfg, st, cid, addr, expect, new) -> (st, old)
-    owner_release: callable   # (cfg, st, cid, addr, val) -> st
-    thief_acquire: callable
-    thief_release: callable
-    owner_acquire_b: callable  # (cfg, st, active, addrs, expect, new)
-    owner_release_b: callable  # (cfg, st, active, addrs, vals)
+    # local (work-group) scope — the cheap common-case ops
+    acquire_loc_b: callable   # (cfg, st, active, addrs, expect, new) -> (st, old)
+    release_loc_b: callable   # (cfg, st, active, addrs, vals) -> st
+    acquire_loc: callable     # (cfg, st, cid, addr, expect, new) -> (st, old)
+    release_loc: callable     # (cfg, st, cid, addr, val) -> st
+    # remote scope — the rare cross-agent ops (scalar = serializing ref)
+    acquire_rem: callable
+    release_rem: callable
+    # global (device) scope — the heavyweight everyone-pays ops
+    acquire_glob_b: callable
+    release_glob_b: callable
+    acquire_glob: callable
+    release_glob: callable
+    # batched address-disjoint remote twins (capability; None = cannot)
+    acquire_rem_b: callable = None
+    release_rem_b: callable = None
+
+    @property
+    def remote_batchable(self) -> bool:
+        """True when the protocol can run address-disjoint remote ops of
+        several agents in one masked round (DESIGN.md §9)."""
+        return self.acquire_rem_b is not None \
+            and self.release_rem_b is not None
+
+    # ---- deprecation shims (pre-redesign names) ----
+    @property
+    def owner_acquire(self):
+        _warn_deprecated("owner_acquire", "acquire_loc")
+        return self.acquire_loc
+
+    @property
+    def owner_release(self):
+        _warn_deprecated("owner_release", "release_loc")
+        return self.release_loc
+
+    @property
+    def thief_acquire(self):
+        _warn_deprecated("thief_acquire", "acquire_rem")
+        return self.acquire_rem
+
+    @property
+    def thief_release(self):
+        _warn_deprecated("thief_release", "release_rem")
+        return self.release_rem
+
+    @property
+    def owner_acquire_b(self):
+        _warn_deprecated("owner_acquire_b", "acquire_loc_b")
+        return self.acquire_loc_b
+
+    @property
+    def owner_release_b(self):
+        _warn_deprecated("owner_release_b", "release_loc_b")
+        return self.release_loc_b
 
 
-SRSP = Protocol("srsp", local_acquire, local_release,
-                srsp_remote_acquire, srsp_remote_release,
-                local_acquire_b, local_release_b)
-RSP = Protocol("rsp", local_acquire, local_release,
-               rsp_remote_acquire, rsp_remote_release,
-               local_acquire_b, local_release_b)
-GLOBAL = Protocol("global", global_acquire, global_release,
-                  global_acquire, global_release,
-                  global_acquire_b, global_release_b)
-LOCAL_ONLY = Protocol("local", local_acquire, local_release,
-                      local_acquire, local_release,
-                      local_acquire_b, local_release_b)  # NOT steal-safe —
-                                                         # demonstrates staleness
+class UnknownNameError(KeyError, ValueError):
+    """Registry miss.  Subclasses BOTH KeyError (it is a mapping miss)
+    and ValueError (what the pre-registry `runner()`/`WorkStealSim`
+    checks raised), so existing handlers of either keep working."""
 
-PROTOCOLS = {p.name: p for p in (SRSP, RSP, GLOBAL, LOCAL_ONLY)}
+
+class Registry(dict):
+    """name -> object mapping whose misses name every registered key —
+    the `PROTOCOLS[...]`-style bare KeyError replacement (ISSUE 4)."""
+
+    def __init__(self, kind: str):
+        super().__init__()
+        self.kind = kind
+
+    def __missing__(self, key):
+        raise UnknownNameError(f"unknown {self.kind} {key!r}; "
+                               f"registered: {sorted(self)}")
+
+
+# The protocol registry.  Indexing an unknown name raises with the list
+# of registered names; `PROTOCOLS` stays importable for existing callers.
+PROTOCOLS = Registry("protocol")
+
+
+def register_protocol(proto: Protocol) -> Protocol:
+    """Register `proto` under its name (usable as a decorator-style
+    wrapper: ``SRSP = register_protocol(Protocol(...))``)."""
+    PROTOCOLS[proto.name] = proto
+    return proto
+
+
+def protocols() -> tuple:
+    """Names of every registered protocol, sorted."""
+    return tuple(sorted(PROTOCOLS))
+
+
+def get_protocol(name: str) -> Protocol:
+    """Registered protocol by name; unknown names raise with the
+    registered list."""
+    return PROTOCOLS[name]
+
+
+SRSP = register_protocol(Protocol(
+    name="srsp",
+    acquire_loc_b=local_acquire_b, release_loc_b=local_release_b,
+    acquire_loc=local_acquire, release_loc=local_release,
+    acquire_rem=srsp_remote_acquire, release_rem=srsp_remote_release,
+    acquire_glob_b=global_acquire_b, release_glob_b=global_release_b,
+    acquire_glob=global_acquire, release_glob=global_release,
+    acquire_rem_b=srsp_remote_acquire_b,
+    release_rem_b=srsp_remote_release_b))
+
+# Original RSP's remote promotion flushes/invalidates EVERY cache, so two
+# remote turns never commute: no batched remote twin, by declaration.
+RSP = register_protocol(Protocol(
+    name="rsp",
+    acquire_loc_b=local_acquire_b, release_loc_b=local_release_b,
+    acquire_loc=local_acquire, release_loc=local_release,
+    acquire_rem=rsp_remote_acquire, release_rem=rsp_remote_release,
+    acquire_glob_b=global_acquire_b, release_glob_b=global_release_b,
+    acquire_glob=global_acquire, release_glob=global_release))
+
+# Baseline: every scope realized as global sync — remote twins are the
+# plain masked global ops (trivially address-disjoint-batchable).
+GLOBAL = register_protocol(Protocol(
+    name="global",
+    acquire_loc_b=global_acquire_b, release_loc_b=global_release_b,
+    acquire_loc=global_acquire, release_loc=global_release,
+    acquire_rem=global_acquire, release_rem=global_release,
+    acquire_glob_b=global_acquire_b, release_glob_b=global_release_b,
+    acquire_glob=global_acquire, release_glob=global_release,
+    acquire_rem_b=global_acquire_b, release_rem_b=global_release_b))
+
+# NOT remote-safe — realizes REMOTE scope as local sync (staleness demo).
+LOCAL_ONLY = register_protocol(Protocol(
+    name="local",
+    acquire_loc_b=local_acquire_b, release_loc_b=local_release_b,
+    acquire_loc=local_acquire, release_loc=local_release,
+    acquire_rem=local_acquire, release_rem=local_release,
+    acquire_glob_b=global_acquire_b, release_glob_b=global_release_b,
+    acquire_glob=global_acquire, release_glob=global_release,
+    acquire_rem_b=local_acquire_b, release_rem_b=local_release_b))

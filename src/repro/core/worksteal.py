@@ -4,6 +4,12 @@ pluggable asymmetric-sharing subsystem (DESIGN.md §7).  The schedulers it
 used to own are the workload-agnostic `repro.workloads.harness`; counters
 and solutions are bitwise-unchanged (tests/test_engine_equivalence.py).
 
+Since the scope-parametric ISA cutover (DESIGN.md §9) the simulator
+issues all synchronization through `repro.core.ops` scoped dispatch
+(owner ops at LOCAL scope, steals at REMOTE scope) and resolves
+protocols through the registry — the re-exported surface below is
+unchanged.
+
 Import from here for the stable public API."""
 from repro.workloads.worksteal import (  # noqa: F401
     AppResult,

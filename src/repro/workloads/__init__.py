@@ -25,6 +25,7 @@ import importlib
 _MODULES = {
     "worksteal": "repro.workloads.worksteal",
     "producer_consumer": "repro.workloads.producer_consumer",
+    "producer_consumer_mc": "repro.workloads.producer_consumer_mc",
     "reader_lock": "repro.workloads.reader_lock",
     "kv_directory": "repro.workloads.kv_directory",
 }

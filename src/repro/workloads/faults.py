@@ -1,16 +1,28 @@
-"""Protocol fault injection for workload self-check tests.
+"""Protocol fault injection as *protocol derivation*.
 
 Every workload's declarative spec carries a consistency check (lost
 updates, stale reads) that reads values THROUGH the simulated memory and
 compares them against host-invisible bookkeeping ground truth.  These
-helpers produce deliberately-weakened protocol tables; a workload whose
-self-check stays green under them isn't checking anything.
+helpers derive deliberately-weakened `Protocol` objects — renamed copies
+with op-table entries overridden (`derive`) — from any registered
+protocol; a workload whose self-check stays green under them isn't
+checking anything.  Derived protocols stay unregistered: they are test
+fixtures, not selectable scenarios.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.core import protocol as P
+
+
+def derive(proto: P.Protocol, suffix: str, **overrides) -> P.Protocol:
+    """A renamed copy of `proto` with op-table fields overridden — the
+    one-stop protocol-derivation hook (fault injection, capability
+    stripping).  Overrides name the scope-parametric fields
+    (`acquire_rem`, `release_loc_b`, `acquire_rem_b`, …)."""
+    return dataclasses.replace(proto, name=f"{proto.name}+{suffix}",
+                               **overrides)
 
 
 def _skip_promotion_acquire(cfg, st, cid, addr, expect, new):
@@ -27,16 +39,28 @@ def _skip_promotion_acquire(cfg, st, cid, addr, expect, new):
 
 
 def no_promotion(proto: P.Protocol) -> P.Protocol:
-    """`proto` with remote acquires no longer promoting (the ISSUE's
-    canonical injected bug).  Releases keep their real semantics.
+    """`proto` with remote acquires no longer promoting (the canonical
+    injected bug).  Releases keep their real semantics.  The batched
+    remote twins are stripped too — the capability would otherwise route
+    scoped REMOTE dispatch around the injected scalar bug.
 
     (A release-side fault — skipping the own-cache flush — is NOT a
     useful injection here: the next remote acquire's probe drains the
     faulty releaser's stranded writes anyway, so the protocol
     self-heals and no workload can observe it.)"""
-    return dataclasses.replace(
-        proto, name=proto.name + "+no_promotion",
-        thief_acquire=_skip_promotion_acquire)
+    return derive(proto, "no_promotion",
+                  acquire_rem=_skip_promotion_acquire,
+                  acquire_rem_b=None, release_rem_b=None)
+
+
+def serialize_remote(proto: P.Protocol) -> P.Protocol:
+    """`proto` with the batched remote twins stripped: scoped REMOTE
+    dispatch falls back to the scalar serializing ops and the harness
+    never co-schedules remote turns.  Semantically identical on
+    address-disjoint schedules (DESIGN.md §9) — the equivalence tests
+    and the sweep's remote-batch A/B pin exactly that."""
+    return derive(proto, "serial_remote",
+                  acquire_rem_b=None, release_rem_b=None)
 
 
 # On the set-associative PA-TBL's silent LRU eviction (DESIGN.md §8):

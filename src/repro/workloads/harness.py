@@ -49,6 +49,15 @@ from; proofs in DESIGN.md §4/§7):
   workload's declarative obligation), so the batched schedule is a
   reordering of the serial one within commuting spans and final states
   are bitwise identical.
+* when a workload declares the remote-batching capability
+  (`remote_turn_b` + `remote_addr`) AND its protocol declares batched
+  address-disjoint remote twins (`Protocol.remote_batchable`),
+  `run_batched` additionally co-schedules non-conflicting remote turns:
+  all remote-capable agents that precede every local candidate
+  (clock-lex) and target pairwise-distinct addresses run in ONE masked
+  remote turn (DESIGN.md §9 has the commutation rule and its hazard
+  argument).  Protocols without the capability — original RSP, whose
+  remote op flushes every cache — serialize exactly as before.
 
 Buffer donation (ROADMAP open item: n_wgs=256 is memory-bound): the
 harness entry points donate the state argument, so XLA may alias the
@@ -72,22 +81,39 @@ from repro.core import protocol as P
 
 BIG = jnp.float32(3e38)
 
-# scenario -> protocol op-table, subsystem-wide (the paper's §5 mapping;
-# worksteal additionally flags which scenarios steal)
-SCENARIO_PROTOCOLS = {
-    "baseline": "global",
-    "scope_only": "local",     # NOT remote-safe — the staleness demo
-    "steal_only": "global",
-    "rsp": "rsp",
-    "srsp": "srsp",
-}
+# scenario -> protocol name, subsystem-wide (the paper's §5 mapping;
+# worksteal additionally flags which scenarios steal).  A registry: an
+# unknown scenario or protocol name raises with the registered list.
+SCENARIO_PROTOCOLS = P.Registry("scenario")
+
+
+def register_scenario(name: str, proto_name: str) -> None:
+    """Map a scenario name onto a registered protocol name."""
+    if proto_name not in P.PROTOCOLS:
+        raise KeyError(f"cannot register scenario {name!r}: unknown "
+                       f"protocol {proto_name!r}; registered protocols: "
+                       f"{sorted(P.PROTOCOLS)}")
+    SCENARIO_PROTOCOLS[name] = proto_name
+
+
+def scenarios() -> tuple:
+    """Names of every registered scenario, sorted."""
+    return tuple(sorted(SCENARIO_PROTOCOLS))
+
+
+register_scenario("baseline", "global")
+register_scenario("scope_only", "local")  # NOT remote-safe — staleness demo
+register_scenario("steal_only", "global")
+register_scenario("rsp", "rsp")
+register_scenario("srsp", "srsp")
 
 
 def resolve_proto(scenario: str, proto: P.Protocol = None) -> P.Protocol:
-    """Scenario's protocol table, overridable for fault injection."""
+    """Scenario's protocol table, overridable for fault injection.
+    Unknown scenario names raise with the registered list."""
     if proto is not None:
         return proto
-    return P.PROTOCOLS[SCENARIO_PROTOCOLS[scenario]]
+    return P.get_protocol(SCENARIO_PROTOCOLS[scenario])
 
 
 class Bench(NamedTuple):
@@ -118,10 +144,21 @@ class Workload:
 
     Instances are jit static arguments: keep `cfg` a frozen dataclass and
     every function a module-level def so two equal-valued Workloads hash
-    equal and share compiled schedulers."""
+    equal and share compiled schedulers.
+
+    `remote_turn_b`/`remote_addr` are the optional remote-batching
+    capability (DESIGN.md §9): `remote_turn_b(wl, s, mask, *ops)`
+    executes one remote turn for every masked agent at once (through the
+    protocol's batched remote twins), and `remote_addr(wl, s, *ops)`
+    names the L2 sync address agent i's next remote turn will target.
+    Declaring them asserts the workload's remote-commutation obligations
+    (§9): remote turns of distinct agents on distinct addresses must be
+    pairwise commuting, with target choice and capability derived from
+    per-agent-private bookkeeping.  The harness only co-schedules when
+    the bound protocol also declares `remote_batchable`."""
     name: str
     cfg: Any                    # frozen workload config (hashable)
-    proto: P.Protocol           # op table (owner/local + thief/remote ops)
+    proto: P.Protocol           # registered scope-parametric op table
     has_remote: bool            # False => every turn commutes (static)
     can_local: Callable
     can_remote: Callable
@@ -129,6 +166,8 @@ class Workload:
     remote_turn: Callable
     remote_bound: Callable
     live: Callable
+    remote_turn_b: Callable = None   # masked multi-agent remote turn
+    remote_addr: Callable = None     # [n] i32 next-remote target address
 
 
 def one_hot(n: int, wg) -> jnp.ndarray:
@@ -177,11 +216,22 @@ def run_batched(wl: Workload, state, *ops):
     Batch rule (DESIGN.md §4): agent i's local turn joins the batch iff
     its clock precedes (a) every currently remote-capable agent's clock,
     with the serial argmin-index tie-break, and (b) every future
-    first-remote lower bound clock[j] + remote_bound[j].  If the batch is
-    empty the trip falls back to one serial turn — remote turns always
-    execute alone, exactly at their serial position."""
+    first-remote lower bound clock[j] + remote_bound[j].
+
+    Remote co-scheduling (DESIGN.md §9): when the local batch is empty
+    and both the workload (`remote_turn_b`/`remote_addr`) and the
+    protocol (`remote_batchable`) declare the capability, every
+    remote-capable agent whose clock precedes every local candidate's
+    clock (argmin-index tie-break) joins a remote batch — minus any lane
+    whose target address collides with an earlier-clock batch member
+    (the earlier lane keeps it; the later retries next trip).  Otherwise
+    the trip falls back to one serial turn — remote turns execute alone,
+    exactly at their serial position."""
     n = state.store.counters.cycles.shape[0]
     wgs = jnp.arange(n, dtype=jnp.int32)
+    remote_cap = (wl.remote_turn_b is not None
+                  and wl.remote_addr is not None
+                  and wl.proto.remote_batchable)
 
     def cond(s):
         return wl.live(wl, s, *ops)
@@ -211,7 +261,34 @@ def run_batched(wl: Workload, state, *ops):
         def do_serial(st):
             return _serial_turn(wl, st, wg_min, can_l, ops)
 
-        return lax.cond(jnp.any(batch), do_batch, do_serial, s)
+        if remote_cap:
+            def do_remote_or_serial(st):
+                # remote candidates preceding every local candidate's
+                # clock (same lex pattern as the local batch, mirrored)
+                lclk = jnp.where(can_l, clocks_all, BIG)
+                ml = jnp.min(lclk)
+                jl = jnp.argmin(lclk).astype(jnp.int32)
+                lexr = (clocks_all < ml) | ((clocks_all == ml) & (wgs < jl))
+                r0 = can_r & lexr
+                raddr = wl.remote_addr(wl, st, *ops)
+                # address dedup: drop a lane iff an earlier (clock, idx)
+                # candidate targets the same address
+                collide = r0[:, None] & r0[None, :] \
+                    & (raddr[:, None] == raddr[None, :])
+                earlier = (clocks_all[None, :] < clocks_all[:, None]) \
+                    | ((clocks_all[None, :] == clocks_all[:, None])
+                       & (wgs[None, :] < wgs[:, None]))
+                rbatch = r0 & ~jnp.any(collide & earlier, axis=1)
+                return lax.cond(
+                    jnp.any(rbatch),
+                    lambda s2: wl.remote_turn_b(wl, s2, rbatch, *ops),
+                    do_serial, st)
+
+            fallback = do_remote_or_serial
+        else:
+            fallback = do_serial
+
+        return lax.cond(jnp.any(batch), do_batch, fallback, s)
 
     return lax.while_loop(cond, body, state)
 
@@ -226,19 +303,33 @@ def run_batched_many(wl: Workload, states, *ops):
     return jax.vmap(lambda s: run_batched.__wrapped__(wl, s, *ops))(states)
 
 
-ENGINES = {"serial": run_serial, "batched": run_batched}
+# Engine registry: unknown names raise with the registered list.
+ENGINES = P.Registry("engine")
+
+
+def register_engine(name: str, fn: Callable) -> Callable:
+    ENGINES[name] = fn
+    return fn
+
+
+def engines() -> tuple:
+    """Names of every registered engine, sorted."""
+    return tuple(sorted(ENGINES))
+
+
+register_engine("serial", run_serial)
+register_engine("batched", run_batched)
 
 
 def runner(engine: str):
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}")
+    """Registered scheduler by name; unknown names raise with the list."""
     return ENGINES[engine]
 
 
 def drain_all(cfg: P.ProtoConfig, st: P.Store) -> P.Store:
     """Flush every cache completely (post-run memory audits)."""
     n = cfg.n_caches
-    st, _ = P.b_drain(cfg, st, jnp.full((n,), P._DRAIN_ALL),
+    st, _ = P.b_drain(cfg, st, jnp.full((n,), P.DRAIN_ALL),
                       jnp.ones((n,), bool))
     return st
 

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import ops as O
 from repro.core import protocol as P
 from repro.core import tables
 from repro.core.costmodel import CostParams
@@ -132,11 +133,11 @@ def _local_turn(wl, s: KVState, mask) -> KVState:
     newval = s.val[b] + delta
 
     st = s.store
-    st, _ = wl.proto.owner_acquire_b(pc, st, mask, lockb, 0, 1)
-    st, vcur = P.b_load(pc, st, mask, lockb + 2)
-    st, _ = P.b_store_word(pc, st, mask, lockb + 2, newval)
-    st, _ = P.b_store_word(pc, st, mask, lockb + 1, s.ver[b] + 1)
-    st = wl.proto.owner_release_b(pc, st, mask, lockb, 0)
+    st, _ = O.acquire(wl.proto, pc, st, mask, lockb, 0, 1, scope=O.LOCAL)
+    st, vcur = O.load(pc, st, mask, lockb + 2)
+    st, _ = O.store(pc, st, mask, lockb + 2, newval)
+    st, _ = O.store(pc, st, mask, lockb + 1, s.ver[b] + 1)
+    st = O.release(wl.proto, pc, st, mask, lockb, 0, scope=O.LOCAL)
     st = harness.charge(st, mask, cfg.task_cost)
 
     # owner stale-read check: the value read through the store must be
@@ -167,10 +168,13 @@ def _remote_turn(wl, s: KVState, wg) -> KVState:
                       jnp.mod(t + 1, jnp.int32(nb)), t)
         lockt = t * cfg.bstride
         st = s.store
-        st, old = wl.proto.thief_acquire(pc, st, wg, lockt, 0, 1)
+        hot = harness.one_hot(cfg.n_agents, wg)
+        st, old_v = O.acquire(wl.proto, pc, st, hot, lockt, 0, 1,
+                              scope=O.REMOTE)
+        old = old_v[wg]
         st, rv = P.load(pc, st, wg, lockt + 1)
         st, vv = P.load(pc, st, wg, lockt + 2)
-        st = wl.proto.thief_release(pc, st, wg, lockt, 0)
+        st = O.release(wl.proto, pc, st, hot, lockt, 0, scope=O.REMOTE)
         fails = (old != 0).astype(jnp.int32) \
             + (rv != s.ver[t]).astype(jnp.int32) \
             + (vv != s.val[t]).astype(jnp.int32)

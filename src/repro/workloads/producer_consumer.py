@@ -1,25 +1,42 @@
-"""Producer/consumer drains — single remote consumer, many local producers.
+"""Producer/consumer drains — remote consumers, many local producers.
 
 Asymmetry shape: every producer appends items to its *own* ring region
-with local-scope synchronization (the overwhelmingly common op); one
-consumer agent periodically performs a *remote-scope* drain of the
-fullest producer's region (the rare op).  This is the inverse of
-work-stealing's thief distribution — one hot remote agent instead of
-many occasional ones — and matches the one-sided access pattern of
+with local-scope synchronization (the overwhelmingly common op);
+`n_consumers` consumer agents periodically perform *remote-scope* drains
+of producer regions (the rare op).  This is the inverse of
+work-stealing's thief distribution — hot remote agents instead of many
+occasional ones — and matches the one-sided access pattern of
 RDMA-style asymmetric mutual exclusion (arXiv:2208.09540).
 
-Spec (DESIGN.md §7):
+With `n_consumers = 1` (the default) this is the paper-shaped workload
+whose single always-hot drainer IS the makespan under every protocol
+(ROADMAP).  With `n_consumers > 1` the producers are *partitioned*:
+producer p belongs to consumer ``p % n_consumers``, so concurrent drains
+target pairwise-distinct locks and the workload can declare the
+remote-batching capability (DESIGN.md §9) — the remote work itself
+parallelizes, which is the ROADMAP follow-up this variant exists to
+measure (registered as `producer_consumer_mc`).
+
+Spec (DESIGN.md §7/§9):
   * local turns: producer i appends item `produced[i]` inside its own
-    lock's critical section; the consumer burns a scratch turn (its own
+    lock's critical section; a consumer burns a scratch turn (its own
     region) while its drain credit is positive.  All local turns touch
     pairwise-disjoint regions → they commute.
-  * remote turn: the consumer (agent 0) remote-acquires the victim's
-    lock, reads the count word and every fresh item THROUGH the store,
-    and releases.  Victim choice (largest produced-consumed gap) and the
-    consumed bookkeeping use host-invisible ground truth only, so the
-    schedule is identical under a buggy protocol — the bug surfaces in
-    the checked values, not as divergence.
-  * fence: the consumer's next drain is at least `credit · scratch_cost`
+  * remote turn: consumer k remote-acquires its victim's lock (largest
+    produced-consumed gap within its OWN partition), reads the count
+    word and every fresh item THROUGH the store, and releases.  Victim
+    choice and the consumed bookkeeping use host-invisible ground truth
+    only, so the schedule is identical under a buggy protocol — the bug
+    surfaces in the checked values, not as divergence.
+  * remote batching obligations (§9): partitions are disjoint, so
+    concurrent drains target distinct addresses whose sharer sets
+    (exactly the victim producer) are disjoint; a drain resets only the
+    drainer's own credit/consumed bookkeeping, so it never changes
+    another consumer's capability or victim; and consumers hold no LR
+    entries or foreign dirty words.  `remote_turn` is literally the
+    one-hot instance of `remote_turn_b`, so serial and batched engines
+    share one implementation.
+  * fence: consumer k's next drain is at least `credit[k] · scratch_cost`
     cycles away (each scratch turn charges exactly that); producers
     never go remote (bound = BIG).
   * self-check: count word must equal the victim's true produced count
@@ -36,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import ops as O
 from repro.core import protocol as P
 from repro.core import tables
 from repro.core.costmodel import CostParams
@@ -47,6 +65,7 @@ VMAPPABLE = True
 @dataclasses.dataclass(frozen=True)
 class Config:
     n_agents: int = 8
+    n_consumers: int = 1        # lanes [0, n_consumers) drain, rest produce
     max_items: int = 8          # static per-producer quota bound
     min_items: int = 4
     warmup: int = 3             # consumer scratch turns between drains
@@ -74,8 +93,8 @@ class PCState(NamedTuple):
     store: P.Store
     produced: jnp.ndarray    # [n] i32 bookkeeping: items appended per producer
     consumed: jnp.ndarray    # [n] i32 bookkeeping: items drained per producer
-    quota: jnp.ndarray       # [n] i32 per-producer target (0 for agent 0)
-    credit: jnp.ndarray      # [] i32 consumer scratch turns before next drain
+    quota: jnp.ndarray       # [n] i32 per-producer target (0 for consumers)
+    credit: jnp.ndarray      # [n] i32 per-consumer scratch turns before drain
     sum_seen: jnp.ndarray    # [] i32 Σ item values read THROUGH the store
     sum_expect: jnp.ndarray  # [] i32 Σ expected values of drained items
     check_fails: jnp.ndarray # [] i32 in-run consistency violations
@@ -96,23 +115,57 @@ def _lanes(cfg: Config):
     return jnp.arange(cfg.n_agents, dtype=jnp.int32)
 
 
+def _is_consumer(cfg: Config):
+    return _lanes(cfg) < cfg.n_consumers
+
+
+def _own_live(wl, s: PCState):
+    """Per-consumer: does my partition still have undrained quota?
+    (Per-lane; meaningless for producer lanes.)"""
+    cfg = wl.cfg
+    lanes = _lanes(cfg)
+    is_prod = lanes >= cfg.n_consumers
+    open_ = is_prod & (s.consumed < s.quota)
+    mine = open_[None, :] & (jnp.mod(lanes[None, :],
+                                     jnp.int32(cfg.n_consumers))
+                             == lanes[:, None])
+    return jnp.any(mine, axis=1)
+
+
+def _victims(wl, s: PCState):
+    """Per-consumer victim: largest produced-consumed gap within own
+    partition (bookkeeping only — protocol-bug-independent schedule)."""
+    cfg = wl.cfg
+    lanes = _lanes(cfg)
+    is_prod = lanes >= cfg.n_consumers
+    gap = jnp.where(is_prod, s.produced - s.consumed, -1)
+    mine = is_prod[None, :] & (jnp.mod(lanes[None, :],
+                                       jnp.int32(cfg.n_consumers))
+                               == lanes[:, None])
+    gm = jnp.where(mine, gap[None, :], -1)
+    return jnp.argmax(gm, axis=1).astype(jnp.int32)
+
+
 def _can_local(wl, s: PCState):
-    lanes = _lanes(wl.cfg)
-    live = jnp.any(s.consumed < s.quota)
-    return jnp.where(lanes == 0, (s.credit > 0) & live, s.produced < s.quota)
+    cons = _is_consumer(wl.cfg)
+    return jnp.where(cons, (s.credit > 0) & _own_live(wl, s),
+                     s.produced < s.quota)
 
 
 def _can_remote(wl, s: PCState):
-    lanes = _lanes(wl.cfg)
-    live = jnp.any(s.consumed < s.quota)
-    return (lanes == 0) & (s.credit == 0) & live
+    return _is_consumer(wl.cfg) & (s.credit == 0) & _own_live(wl, s)
 
 
 def _remote_bound(wl, s: PCState):
-    lanes = _lanes(wl.cfg)
-    return jnp.where(lanes == 0,
+    return jnp.where(_is_consumer(wl.cfg),
                      s.credit.astype(jnp.float32) * wl.cfg.scratch_cost,
                      harness.BIG)
+
+
+def _remote_addr(wl, s: PCState):
+    """Next drain's lock address per consumer lane (harness co-scheduling
+    dedup input, DESIGN.md §9)."""
+    return _victims(wl, s) * jnp.int32(wl.cfg.stride)
 
 
 def _live(wl, s: PCState):
@@ -123,23 +176,22 @@ def _local_turn(wl, s: PCState, mask) -> PCState:
     cfg = wl.cfg
     pc = cfg.proto_cfg()
     lanes = _lanes(cfg)
-    is0 = lanes == 0
-    prod = mask & ~is0
-    cons = mask & is0
+    cons = mask & _is_consumer(cfg)
+    prod = mask & ~_is_consumer(cfg)
     locks = lanes * cfg.stride
 
     st = s.store
-    # producers: append inside own critical section (local-scope sync)
-    st, _ = wl.proto.owner_acquire_b(pc, st, prod, locks, 0, 1)
+    # producers: append inside own critical section (LOCAL-scope sync)
+    st, _ = O.acquire(wl.proto, pc, st, prod, locks, 0, 1, scope=O.LOCAL)
     slot = jnp.clip(s.produced, 0, cfg.max_items - 1)
-    st, _ = P.b_store_word(pc, st, prod, locks + 2 + slot,
-                           _item_val(lanes, s.produced))
-    st, _ = P.b_store_word(pc, st, prod, locks + 1, s.produced + 1)
-    st = wl.proto.owner_release_b(pc, st, prod, locks, 0)
-    # consumer: scratch write in its own region (write-combining dirt)
-    st, _ = P.b_store_word(pc, st, cons,
-                           locks + 2 + s.credit % jnp.int32(cfg.max_items),
-                           jnp.broadcast_to(s.credit, (cfg.n_agents,)))
+    st, _ = O.store(pc, st, prod, locks + 2 + slot,
+                    _item_val(lanes, s.produced))
+    st, _ = O.store(pc, st, prod, locks + 1, s.produced + 1)
+    st = O.release(wl.proto, pc, st, prod, locks, 0, scope=O.LOCAL)
+    # consumers: scratch write in their own regions (write-combining dirt)
+    st, _ = O.store(pc, st, cons,
+                    locks + 2 + s.credit % jnp.int32(cfg.max_items),
+                    s.credit)
     st = harness.charge(st, mask, cfg.scratch_cost)
 
     return PCState(
@@ -147,66 +199,72 @@ def _local_turn(wl, s: PCState, mask) -> PCState:
         produced=s.produced + prod.astype(jnp.int32),
         consumed=s.consumed,
         quota=s.quota,
-        credit=s.credit - cons[0].astype(jnp.int32),
+        credit=s.credit - cons.astype(jnp.int32),
         sum_seen=s.sum_seen, sum_expect=s.sum_expect,
         check_fails=s.check_fails,
         rounds=s.rounds + jnp.sum(mask.astype(jnp.int32)))
 
 
-def _remote_turn(wl, s: PCState, wg) -> PCState:
+def _remote_turn_b(wl, s: PCState, rmask) -> PCState:
+    """Masked multi-consumer drain: every masked consumer drains its own
+    partition's fullest producer in ONE set of scoped ops.  Lanes whose
+    precondition fails no-op (vmapped stragglers idle harmlessly)."""
     cfg = wl.cfg
     pc = cfg.proto_cfg()
-    do = _can_remote(wl, s)[wg]   # the scheduler's own predicate, in sync
+    n = cfg.n_agents
+    do = jnp.asarray(rmask, bool) & _can_remote(wl, s)
+    victim = _victims(wl, s)
+    lockv = victim * cfg.stride
+    start = s.consumed[victim]
+    end = s.produced[victim]
 
-    def drain(s: PCState) -> PCState:
-        gap = (s.produced - s.consumed).at[0].set(-1)  # never self-drain
-        victim = jnp.argmax(gap).astype(jnp.int32)
-        lockv = victim * cfg.stride
-        start = s.consumed[victim]
-        end = s.produced[victim]
+    st = s.store
+    st, old = O.acquire(wl.proto, pc, st, do, lockv, 0, 1, scope=O.REMOTE)
+    st, cnt = O.load(pc, st, do, lockv + 1)
 
-        st = s.store
-        st, old = wl.proto.thief_acquire(pc, st, 0, lockv, 0, 1)
-        st, cnt = P.load(pc, st, 0, lockv + 1)
-        seen = jnp.int32(0)
+    def rd(carry, j):
+        st, seen = carry
+        st, v = O.load(pc, st, do, lockv + 2 + j)
+        seen = seen + jnp.where(do & (j >= start) & (j < end), v, 0)
+        return (st, seen), None
 
-        def rd(carry, j):
-            st, seen = carry
-            st, v = P.load(pc, st, 0, lockv + 2 + j)
-            seen = seen + jnp.where((j >= start) & (j < end), v, 0)
-            return (st, seen), None
+    (st, seen), _ = lax.scan(rd, (st, jnp.zeros((n,), jnp.int32)),
+                             jnp.arange(cfg.max_items, dtype=jnp.int32))
+    st = O.release(wl.proto, pc, st, do, lockv, 0, scope=O.REMOTE)
 
-        (st, seen), _ = lax.scan(rd, (st, seen),
-                                 jnp.arange(cfg.max_items, dtype=jnp.int32))
-        st = wl.proto.thief_release(pc, st, 0, lockv, 0)
+    m = end - start
+    # Σ_{j=start..end-1} item_val(victim, j), closed form, per lane
+    expect = m * ((victim + 1) * 131 + 1) + 7 * (start + end - 1) * m // 2
+    fails = jnp.where(do, (cnt != end).astype(jnp.int32)
+                      + (old != 0).astype(jnp.int32), 0)
+    return PCState(
+        store=st,
+        produced=s.produced,
+        consumed=s.consumed.at[jnp.where(do, victim, n)].set(end,
+                                                             mode="drop"),
+        quota=s.quota,
+        credit=jnp.where(do, jnp.int32(cfg.warmup), s.credit),
+        sum_seen=s.sum_seen + jnp.sum(jnp.where(do, seen, 0)),
+        sum_expect=s.sum_expect + jnp.sum(jnp.where(do, expect, 0)),
+        check_fails=s.check_fails + jnp.sum(fails),
+        rounds=s.rounds + jnp.sum(do.astype(jnp.int32)))
 
-        m = end - start
-        # Σ_{j=start..end-1} item_val(victim, j), closed form
-        expect = m * ((victim + 1) * 131 + 1) + 7 * (start + end - 1) * m // 2
-        fails = (cnt != end).astype(jnp.int32) + (old != 0).astype(jnp.int32)
-        return PCState(
-            store=st,
-            produced=s.produced,
-            consumed=s.consumed.at[victim].set(end),
-            quota=s.quota,
-            credit=jnp.int32(cfg.warmup),
-            sum_seen=s.sum_seen + seen,
-            sum_expect=s.sum_expect + expect,
-            check_fails=s.check_fails + fails,
-            rounds=s.rounds + 1)
 
-    def idle(s: PCState) -> PCState:
-        return s._replace(rounds=s.rounds + 1)
-
-    return lax.cond(do, drain, idle, s)
+def _remote_turn(wl, s: PCState, wg) -> PCState:
+    """Serializing reference turn — literally the one-hot batched turn."""
+    return _remote_turn_b(wl, s, harness.one_hot(wl.cfg.n_agents, wg))
 
 
 def build_workload(cfg: Config, proto: P.Protocol) -> harness.Workload:
+    if not 1 <= cfg.n_consumers < cfg.n_agents:
+        raise ValueError(f"n_consumers must be in [1, n_agents); got "
+                         f"{cfg.n_consumers} of {cfg.n_agents} agents")
     return harness.Workload(
         name="producer_consumer", cfg=cfg, proto=proto, has_remote=True,
         can_local=_can_local, can_remote=_can_remote,
         local_turn=_local_turn, remote_turn=_remote_turn,
-        remote_bound=_remote_bound, live=_live)
+        remote_bound=_remote_bound, live=_live,
+        remote_turn_b=_remote_turn_b, remote_addr=_remote_addr)
 
 
 def init_state(wl, seed) -> PCState:
@@ -218,14 +276,14 @@ def init_state(wl, seed) -> PCState:
     spread = cfg.max_items - cfg.min_items + 1
     quota = cfg.min_items + jnp.mod(seed * 40503 + lanes * 1000003,
                                     jnp.int32(spread))
-    quota = jnp.where(lanes == 0, 0, quota).astype(jnp.int32)
+    quota = jnp.where(lanes < cfg.n_consumers, 0, quota).astype(jnp.int32)
     n = cfg.n_agents
     return PCState(
         store=P.make_store(cfg.proto_cfg()),
         produced=jnp.zeros((n,), jnp.int32),
         consumed=jnp.zeros((n,), jnp.int32),
         quota=quota,
-        credit=jnp.int32(cfg.warmup),
+        credit=jnp.full((n,), cfg.warmup, jnp.int32),
         sum_seen=jnp.int32(0), sum_expect=jnp.int32(0),
         check_fails=jnp.int32(0), rounds=jnp.int32(0))
 
@@ -241,7 +299,7 @@ def self_check(wl, final: PCState) -> dict:
     st = harness.drain_all(pc, final.store)
     l2 = np.asarray(st.l2).reshape(-1)
     quota = np.asarray(final.quota)
-    for i in range(1, cfg.n_agents):
+    for i in range(cfg.n_consumers, cfg.n_agents):
         base = i * cfg.stride
         if l2[base + 1] != quota[i]:
             fails += 1

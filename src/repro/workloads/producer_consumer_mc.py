@@ -1,0 +1,38 @@
+"""Multi-consumer producer/consumer — the ROADMAP follow-up variant.
+
+Identical spec to `producer_consumer`, with the consumer side scaled to
+``max(2, n_agents // 8)`` drainers (one per 8 agents, minimum two) so
+the rare remote work itself parallelizes: partitioned victims give every
+concurrent drain a distinct lock address, the workload declares the
+remote-batching capability (DESIGN.md §9), and protocols with batched
+remote twins (srsp, global, local) co-schedule the drains in one masked
+turn.  This is the configuration under which producer_consumer's
+"single always-hot drainer IS the makespan" structural bound (ROADMAP,
+BENCH_workloads.json metric_note) can finally break — the sweep records
+whether srsp reaches baseline parity here either way.
+"""
+from __future__ import annotations
+
+from repro.core import protocol as P
+from repro.workloads import harness, producer_consumer as _pc
+
+VMAPPABLE = True
+
+Config = _pc.Config
+PCState = _pc.PCState
+init_state = _pc.init_state
+self_check = _pc.self_check
+build_workload = _pc.build_workload
+
+
+def default_consumers(n_agents: int) -> int:
+    """One drainer per 8 agents, minimum two — clamped so tiny machines
+    (n_agents <= 2) degrade to the single-consumer shape instead of
+    tripping build_workload's n_consumers < n_agents guard."""
+    return max(1, min(n_agents - 1, max(2, n_agents // 8)))
+
+
+def build(scenario: str, n_agents: int, seed: int = 0, *,
+          proto: P.Protocol = None, **kw) -> harness.Bench:
+    kw.setdefault("n_consumers", default_consumers(n_agents))
+    return _pc.build(scenario, n_agents, seed, proto=proto, **kw)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import ops as O
 from repro.core import protocol as P
 from repro.core import tables
 from repro.core.costmodel import CostParams
@@ -125,15 +126,15 @@ def _local_turn(wl, s: RLState, mask) -> RLState:
 
     st = s.store
     # writer: publish version writes_done+1 to every payload word inside
-    # its own critical section (local-scope sync)
-    st, _ = wl.proto.owner_acquire_b(pc, st, wmask, zeros, 0, 1)
+    # its own critical section (LOCAL-scope sync)
+    st, _ = O.acquire(wl.proto, pc, st, wmask, zeros, 0, 1, scope=O.LOCAL)
     ver = jnp.broadcast_to(s.writes_done + 1, (n,))
     for j in range(cfg.payload_w):
-        st, _ = P.b_store_word(pc, st, wmask, zeros + 2 + j, ver)
-    st = wl.proto.owner_release_b(pc, st, wmask, zeros, 0)
+        st, _ = O.store(pc, st, wmask, zeros + 2 + j, ver)
+    st = O.release(wl.proto, pc, st, wmask, zeros, 0, scope=O.LOCAL)
     # readers: scratch write in their own regions
     scr = lanes * cfg.stride + 2 + s.credit % jnp.int32(8)
-    st, _ = P.b_store_word(pc, st, rmask, scr, s.credit)
+    st, _ = O.store(pc, st, rmask, scr, s.credit)
     st = harness.charge(st, mask, cfg.scratch_cost)
 
     return RLState(
@@ -153,14 +154,16 @@ def _remote_turn(wl, s: RLState, wg) -> RLState:
 
     def read(s: RLState) -> RLState:
         st = s.store
-        st, old = wl.proto.thief_acquire(pc, st, wg, 0, 0, 1)
+        hot = harness.one_hot(cfg.n_agents, wg)
+        st, old_v = O.acquire(wl.proto, pc, st, hot, 0, 0, 1, scope=O.REMOTE)
+        old = old_v[wg]
         st, v0 = P.load(pc, st, wg, 2)
         fails = (old != 0).astype(jnp.int32) \
             + (v0 != s.writes_done).astype(jnp.int32)
         for j in range(1, cfg.payload_w):
             st, vj = P.load(pc, st, wg, 2 + j)
             fails = fails + (vj != v0).astype(jnp.int32)  # torn read
-        st = wl.proto.thief_release(pc, st, wg, 0, 0)
+        st = O.release(wl.proto, pc, st, hot, 0, 0, scope=O.REMOTE)
         return RLState(
             store=st,
             writes_done=s.writes_done,

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import ops as O
 from repro.core import protocol as P
 from repro.core import costmodel, sfifo, tables
 from repro.data.graphs import CSRGraph, collab_like
@@ -86,14 +87,16 @@ class WSConfig:
                              pa_tbl=self.pa_tbl, params=self.params)
 
 
-SCENARIOS = {
-    #  name        -> (protocol, steal?)
+# name -> (protocol, steal?).  A registry: unknown scenario names raise
+# with the registered list instead of a bare KeyError.
+SCENARIOS = P.Registry("worksteal scenario")
+SCENARIOS.update({
     "baseline":   ("global", False),
     "scope_only": ("local", False),
     "steal_only": ("global", True),
     "rsp":        ("rsp", True),
     "srsp":       ("srsp", True),
-}
+})
 
 
 class SimState(NamedTuple):
@@ -150,14 +153,15 @@ def _steal_or_idle_turn(wl, state: SimState, wg, chunk_count, chunk_edges
 
     def do_steal(st):
         lock = victim * ws.qstride
-        st, _ = proto.thief_acquire(cfg, st, wg, lock, 0, 1)
+        hot = harness.one_hot(ws.n_wgs, wg)
+        st, _ = O.acquire(proto, cfg, st, hot, lock, 0, 1, scope=O.REMOTE)
         st, head = P.load(cfg, st, wg, lock + 1)
         st, tail = P.load(cfg, st, wg, lock + 2)
         has = head < tail
         slot = jnp.clip(head, 0, ws.qcap - 1)
         st, task = P.load(cfg, st, wg, lock + QMETA + slot)
         st, _ = P.store_word(cfg, st, wg, lock + 1, head + 1, guard=has)
-        st = proto.thief_release(cfg, st, wg, lock, 0)
+        st = O.release(proto, cfg, st, hot, lock, 0, scope=O.REMOTE)
         c = st.counters
         st = st._replace(counters=c._replace(
             steals=c.steals + has.astype(jnp.float32)))
@@ -222,14 +226,14 @@ def _pop_batch_turn(wl, state: SimState, mask, chunk_count, chunk_edges
     locks = wgs * ws.qstride
 
     st = state.store
-    st, _ = proto.owner_acquire_b(cfg, st, mask, locks, 0, 1)
-    st, tail = P.b_load(cfg, st, mask, locks + 2)
-    st, head = P.b_load(cfg, st, mask, locks + 1)
+    st, _ = O.acquire(proto, cfg, st, mask, locks, 0, 1, scope=O.LOCAL)
+    st, tail = O.load(cfg, st, mask, locks + 2)
+    st, head = O.load(cfg, st, mask, locks + 1)
     has = mask & (head < tail)
     slot = jnp.clip(tail - 1, 0, ws.qcap - 1)
-    st, task = P.b_load(cfg, st, mask, locks + QMETA + slot)
-    st, _ = P.b_store_word(cfg, st, has, locks + 2, tail - 1)
-    st = proto.owner_release_b(cfg, st, mask, locks, 0)
+    st, task = O.load(cfg, st, mask, locks + QMETA + slot)
+    st, _ = O.store(cfg, st, has, locks + 2, tail - 1)
+    st = O.release(proto, cfg, st, mask, locks, 0, scope=O.LOCAL)
     chunk = jnp.where(has, task - 1, -1)
 
     qsize = jnp.maximum(state.qsize - mask.astype(jnp.int32), 0)
@@ -286,18 +290,20 @@ class WorkStealSim:
 
     def __init__(self, ws: WSConfig, scenario: str, engine: str = "batched"):
         if scenario not in SCENARIOS:
-            raise ValueError(f"unknown scenario {scenario!r}")
+            raise ValueError(f"unknown scenario {scenario!r}; "
+                             f"registered: {sorted(SCENARIOS)}")
         if engine not in ENGINES:
-            raise ValueError(f"unknown engine {engine!r}")
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"registered: {sorted(ENGINES)}")
         self.ws = ws
         self.scenario = scenario
         self.engine = engine
         proto_name, steal = SCENARIOS[scenario]
-        self.proto = P.PROTOCOLS[proto_name]
+        self.proto = P.get_protocol(proto_name)
         self.steal = steal
         self.cfg = ws.proto_cfg()
-        self._enqueue = partial(_enqueue_jit, ws, self.proto.owner_acquire_b,
-                                self.proto.owner_release_b)
+        self._enqueue = partial(_enqueue_jit, ws, self.proto.acquire_loc_b,
+                                self.proto.release_loc_b)
         self.workload = build_workload(ws, self.proto, steal)
         self._run_rounds = partial(harness.runner(engine), self.workload)
 
@@ -384,8 +390,10 @@ def _enqueue_jit(ws: WSConfig, oacq_b, orel_b, store: P.Store, enq_owner,
     is a scan over *block offsets* (a handful) with all work-groups pushing
     in lockstep, not a scan over work-groups.
 
-    Static key = (config, owner acquire/release ops): scenarios with the
-    same owner-side protocol share this compiled program."""
+    Static key = (config, LOCAL-scope acquire/release table entries):
+    scenarios whose protocols share the local-scope realization share
+    this compiled program (srsp/rsp/scope_only, and baseline/steal_only),
+    which a full-Protocol key would needlessly split."""
     cfg = ws.proto_cfg()
     n = ws.n_wgs
     W = cfg.block_words
@@ -626,7 +634,7 @@ def build(scenario: str, n_agents: int, seed: int = 0, *,
     # round-robin — guarantees the imbalance that makes steals happen
     plan = _chunk_plan(ws, frontier, g.degrees,
                        lambda c, sel, nc: 0 if c < nc // 2 else c % ws.n_wgs)
-    store = _enqueue_jit(ws, p.owner_acquire_b, p.owner_release_b,
+    store = _enqueue_jit(ws, p.acquire_loc_b, p.release_loc_b,
                          P.make_store(ws.proto_cfg()),
                          jnp.asarray(plan.owner), jnp.asarray(plan.slot),
                          jnp.asarray(plan.valid), jnp.asarray(plan.n_enq))

@@ -70,7 +70,7 @@ def test_weakened_protocol_is_caught(name):
     """Remote acquire without promotion (faults.no_promotion) leaves the
     owners' released writes stranded in their L1s; every workload's
     self-check must flag the resulting stale reads."""
-    broken = faults.no_promotion(P.PROTOCOLS["srsp"])
+    broken = faults.no_promotion(P.get_protocol("srsp"))
     final, check = _run(name, "srsp", "batched", proto=broken)
     res = check(final)
     assert not res["ok"], (name, res)
@@ -96,7 +96,7 @@ def test_tiny_pa_geometry_still_correct(name):
 @pytest.mark.slow
 def test_weakened_protocol_caught_by_worksteal_too():
     final, check = _run("worksteal", "srsp", "batched",
-                        proto=faults.no_promotion(P.PROTOCOLS["srsp"]))
+                        proto=faults.no_promotion(P.get_protocol("srsp")))
     assert not check(final)["ok"]
     jax.clear_caches()
 
@@ -142,6 +142,7 @@ def test_registry_lists_all_workloads():
     names = workloads.available()
     assert set(NEW_WORKLOADS) <= set(names)
     assert "worksteal" in names
+    assert "producer_consumer_mc" in names   # the multi-consumer variant
     for n in names:
         m = workloads.get(n)
         assert hasattr(m, "build") and hasattr(m, "VMAPPABLE")
