@@ -39,7 +39,7 @@ sweep-smoke:
 	  --no-donation --no-pack-ab --remote-batch-sizes 16 \
 	  --out BENCH_workloads.smoke.json
 	$(PYTHON) -c "import json; d=json.load(open('BENCH_workloads.smoke.json')); \
-	  assert d['schema_version'] == 4 and d['runs'], d.get('schema_version'); \
+	  assert d['schema_version'] == 5 and d['runs'], d.get('schema_version'); \
 	  bad=[r for r in d['runs'] if not r['check_ok'] \
 	       and r['scenario'] != 'scope_only']; \
 	  assert not bad, bad; \
@@ -48,5 +48,9 @@ sweep-smoke:
 	  assert rb, 'no remote-batch-capable cell in the grid'; \
 	  ab=d['remote_batch_ab']; \
 	  assert ab and all(r['check_ok'] for r in ab), ab; \
+	  ch=[r for r in d['runs'] if r['churn_events']]; \
+	  assert ch, 'no churned crash-recovery cell'; \
+	  assert all(r['check_ok'] and r['recovered'] > 0 \
+	             and r['lost_updates'] == 0 for r in ch), ch; \
 	  print('sweep smoke OK:', len(d['runs']), 'cells,', \
-	        len(rb), 'remote-batch cells')"
+	        len(rb), 'remote-batch cells,', len(ch), 'churned')"

@@ -1,0 +1,78 @@
+"""Elastic alive-set scheduling demo (DESIGN.md §10, ISSUE 6).
+
+Three runs of the work-stealing bench on the batched ELASTIC engine:
+
+  1. zero churn        — the elastic wrapper is bitwise invisible;
+  2. crash + recovery  — agent 0 (owner of most chunks) dies INSIDE a
+     critical section (faults.crash_holding_lock): its release never
+     executes, so the queue lock stays held and its lease survives.  A
+     CRASH churn event retires the agent; when the lease expires the
+     protocol runs a recovery drain — write back the dead agent's dirty
+     words, force-release its leased sync word, invalidate its
+     LR/PA-TBL entries — and the surviving thieves drain its queue.
+  3. crash, no recovery (faults.lease_never_expires) — the pre-lease
+     wedge: the run still TERMINATES (elastic loop guard) but the
+     self-check reports the chunks lost behind the dead agent's lock.
+
+Then a leave→join round on kv_directory: a LEAVE retires an agent (its
+obligations are forgiven, its state reclaimed immediately), a later
+JOIN re-admits it with fresh work.
+
+  PYTHONPATH=src python examples/elastic_churn_demo.py
+"""
+import numpy as np
+
+from repro import workloads
+from repro.core import protocol as P
+from repro.workloads import faults, harness
+
+# the pinned crash geometry from tests/test_churn.py
+VICTIM, AT, EVT = 0, 5.0, 400.0
+
+
+def run(name, proto=None, events=(), engine="batched_elastic", **kw):
+    b = workloads.get(name).build("srsp", 4, seed=3, proto=proto, **kw)
+    eb = harness.make_elastic(b, events=events)
+    fin = harness.runner(engine)(eb.wl, eb.state, *eb.ops)
+    res = eb.check(fin)
+    rec = float(np.sum(np.asarray(fin.s.store.counters.recoveries)))
+    return fin, res, rec
+
+
+def main():
+    srsp = P.get_protocol("srsp")
+    crash = [(EVT, VICTIM, "crash")]
+
+    print("== worksteal / srsp on the batched elastic engine ==")
+    fin, res, rec = run("worksteal", n_chunks_max=12)
+    print(f"zero churn:        check={'ok' if res['ok'] else 'FAIL':4s} "
+          f"alive={np.asarray(fin.alive).tolist()} recovered={rec:.0f}")
+
+    fin, res, rec = run(
+        "worksteal", proto=faults.crash_holding_lock(srsp, VICTIM, AT),
+        events=crash, n_chunks_max=12)
+    print(f"crash + recovery:  check={'ok' if res['ok'] else 'FAIL':4s} "
+          f"alive={np.asarray(fin.alive).tolist()} recovered={rec:.0f} "
+          f"(agent {VICTIM} died holding its queue lock at clock {AT:.0f}; "
+          f"lease expired at the churn event, drain reclaimed its chunks)")
+
+    fin, res, rec = run(
+        "worksteal",
+        proto=faults.lease_never_expires(
+            faults.crash_holding_lock(srsp, VICTIM, AT)),
+        events=crash, n_chunks_max=12)
+    print(f"crash, no lease:   check={'ok' if res['ok'] else 'FAIL':4s} "
+          f"alive={np.asarray(fin.alive).tolist()} recovered={rec:.0f} "
+          f"lost={res['check_fails']} "
+          f"(terminates — loop guard — but the loss is reported)")
+
+    print("\n== kv_directory / srsp: leave then join ==")
+    fin, res, rec = run("kv_directory",
+                        events=[(50.0, 2, "leave"), (150.0, 2, "join")])
+    print(f"leave@50 join@150: check={'ok' if res['ok'] else 'FAIL':4s} "
+          f"alive={np.asarray(fin.alive).tolist()} recovered={rec:.0f} "
+          f"(agent 2's quota was forgiven at leave, extended at join)")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,19 +5,33 @@ consistency self-check verdict, and — per the scope-parametric ISA
 address-disjoint remote turns (`rbatch`).
 
   PYTHONPATH=src python examples/workloads_demo.py [--agents 8] [--seed 0]
+      [--engine batched] [--scenarios srsp rsp]
 
 Every workload issues its synchronization through `repro.core.ops`
-scoped dispatch; the scenario column is just a protocol-registry lookup
-(`harness.resolve_proto`).  `scope_only` failing its self-check on
-remote-turn workloads is the point — local-scope sync is not
-remote-safe, which is why the paper needs promotion at all.
+scoped dispatch; scenario and engine names come from the harness
+REGISTRIES (`harness.scenarios()` / `harness.engines()`), so protocols
+and engines registered by extensions show up here automatically.
+Elastic engines (DESIGN.md §10) run each bench wrapped in a zero-churn
+alive-set — bitwise identical to the plain engines by contract.
+`scope_only` failing its self-check on remote-turn workloads is the
+point — local-scope sync is not remote-safe, which is why the paper
+needs promotion at all.
 """
 import argparse
 
 from repro import workloads
 from repro.workloads import harness
 
-SCENARIOS = ["baseline", "scope_only", "rsp", "srsp"]
+
+def run_bench(b, engine):
+    """Run a bench on any registered engine; elastic engines take the
+    zero-churn alive-set wrapping (harness.make_elastic)."""
+    if engine in ("serial_elastic", "batched_elastic"):
+        eb = harness.make_elastic(b)
+        fin = harness.runner(engine)(eb.wl, eb.state, *eb.ops)
+        return fin.s, eb.check(fin)
+    final = harness.runner(engine)(b.wl, b.state, *b.ops)
+    return final, b.check(final)
 
 
 def main():
@@ -25,19 +39,24 @@ def main():
     ap.add_argument("--agents", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workloads", nargs="+", default=workloads.available())
+    ap.add_argument("--engine", choices=harness.engines(), default="batched")
+    ap.add_argument("--scenarios", nargs="+", default=None,
+                    help=f"subset of {harness.scenarios()}")
     args = ap.parse_args()
+    scens = args.scenarios or [s for s in harness.scenarios()
+                               if s != "steal_only"]
 
     for name in args.workloads:
         mod = workloads.get(name)
-        print(f"\n== {name} (n_agents={args.agents}) ==")
+        print(f"\n== {name} (n_agents={args.agents}, "
+              f"engine={args.engine}) ==")
         print(f"{'scenario':12s} {'makespan':>10s} {'L2 acc':>8s} "
               f"{'promos':>7s} {'inv':>5s} {'events':>7s} {'check':>6s} "
               f"{'rbatch':>7s}")
-        for scen in SCENARIOS:
+        for scen in scens:
             b = mod.build(scen, args.agents, seed=args.seed)
-            final = harness.run_batched(b.wl, b.state, *b.ops)
+            final, res = run_bench(b, args.engine)
             c = harness.counters_dict(final.store)
-            res = b.check(final)
             rbatch = (b.wl.remote_turn_b is not None
                       and b.wl.remote_addr is not None
                       and b.wl.proto.remote_batchable)

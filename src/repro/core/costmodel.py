@@ -58,16 +58,17 @@ class Counters(NamedTuple):
     l1_hits: jnp.ndarray       # [] f32
     l1_misses: jnp.ndarray     # [] f32
     steals: jnp.ndarray        # [] f32
+    recoveries: jnp.ndarray    # [] f32 crash-recovery drains (lease expiry)
 
 
 def make_counters(n_caches: int) -> Counters:
     # one distinct zero buffer per scalar: a Counters pytree is donated
     # through the scheduler jit boundary (harness.py), and XLA rejects
     # donating the same buffer twice — a shared 0.0 constant would be.
-    zs = jnp.zeros((11,), jnp.float32)
+    zs = jnp.zeros((12,), jnp.float32)
     (l2_accesses, wb_blocks, inv_full, probes, promotions, local_syncs,
-     remote_syncs, global_syncs, l1_hits, l1_misses, steals) = \
-        (zs[i] for i in range(11))
+     remote_syncs, global_syncs, l1_hits, l1_misses, steals, recoveries) = \
+        (zs[i] for i in range(12))
     return Counters(cycles=jnp.zeros((n_caches,), jnp.float32),
                     l2_accesses=l2_accesses, wb_blocks=wb_blocks,
                     inv_full=inv_full,
@@ -75,7 +76,8 @@ def make_counters(n_caches: int) -> Counters:
                     probes=probes, promotions=promotions,
                     local_syncs=local_syncs, remote_syncs=remote_syncs,
                     global_syncs=global_syncs, l1_hits=l1_hits,
-                    l1_misses=l1_misses, steals=steals)
+                    l1_misses=l1_misses, steals=steals,
+                    recoveries=recoveries)
 
 
 def charge(c: Counters, cid, cyc) -> Counters:

@@ -62,6 +62,23 @@ def _bcast(x, n: int) -> jnp.ndarray:
     return jnp.broadcast_to(jnp.asarray(x, jnp.int32), (n,))
 
 
+def _gate_crashed(proto: P.Protocol, st: P.Store, active):
+    """Crash-fault lane kill (Protocol.crash_gate): once the victim's
+    clock passes the crash time, its *release* instructions never execute
+    — including their lease clears, so the lease taken at acquire
+    survives for the recovery drain to act on.  Acquires stay live: the
+    dying agent keeps entering critical sections it can never exit, which
+    is exactly the die-holding-lock state.  Static no-op when the
+    protocol is healthy."""
+    if proto.crash_gate is None:
+        return active
+    victim, at = proto.crash_gate
+    n = st.counters.cycles.shape[0]
+    dying = (jnp.arange(n, dtype=jnp.int32) == victim) \
+        & (st.counters.cycles >= jnp.float32(at))
+    return jnp.asarray(active, bool) & ~dying
+
+
 def _acquire_rem(proto: P.Protocol, cfg, st, rem, addrs, expect, new):
     """REMOTE-scope acquire lanes: batched twin when the protocol declares
     one, else the scalar serializing op (at most one active lane)."""
@@ -112,10 +129,17 @@ def acquire(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
     if isinstance(scope, int):
         _check_static(scope)
         if scope == LOCAL:
-            return proto.acquire_loc_b(cfg, st, active, addrs, expect, new)
-        if scope == GLOBAL:
-            return proto.acquire_glob_b(cfg, st, active, addrs, expect, new)
-        return _acquire_rem(proto, cfg, st, active, addrs, expect, new)
+            st, old = proto.acquire_loc_b(cfg, st, active, addrs, expect,
+                                          new)
+        elif scope == GLOBAL:
+            st, old = proto.acquire_glob_b(cfg, st, active, addrs, expect,
+                                           new)
+        else:
+            st, old = _acquire_rem(proto, cfg, st, active, addrs, expect,
+                                   new)
+        # clock-stamped lease bookkeeping (crash recovery, DESIGN.md §10):
+        # pure metadata, charges nothing — zero-churn schedules unchanged
+        return P.lease_stamp(st, active, addrs), old
     scope = jnp.asarray(scope, jnp.int32)
     active = jnp.asarray(active, bool)
     loc = active & (scope == LOCAL)
@@ -125,7 +149,7 @@ def acquire(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
     st, old_g = proto.acquire_glob_b(cfg, st, glob, addrs, expect, new)
     st, old_r = _acquire_rem(proto, cfg, st, rem, addrs, expect, new)
     old = jnp.where(rem, old_r, jnp.where(glob, old_g, old_l))
-    return st, old
+    return P.lease_stamp(st, active, addrs), old
 
 
 def release(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
@@ -133,20 +157,25 @@ def release(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
     """Scoped release, one per active agent: store `vals[i]` to
     `addrs[i]` with release semantics at `scope[i]`.  Returns store'."""
     addrs, vals = (_bcast(a, cfg.n_caches) for a in (addrs, vals))
+    active = _gate_crashed(proto, st, active)
     if isinstance(scope, int):
         _check_static(scope)
         if scope == LOCAL:
-            return proto.release_loc_b(cfg, st, active, addrs, vals)
-        if scope == GLOBAL:
-            return proto.release_glob_b(cfg, st, active, addrs, vals)
-        return _release_rem(proto, cfg, st, active, addrs, vals)
+            st = proto.release_loc_b(cfg, st, active, addrs, vals)
+        elif scope == GLOBAL:
+            st = proto.release_glob_b(cfg, st, active, addrs, vals)
+        else:
+            st = _release_rem(proto, cfg, st, active, addrs, vals)
+        # lease bookkeeping mirror of `acquire` (pure metadata)
+        return P.lease_clear(st, active)
     scope = jnp.asarray(scope, jnp.int32)
     active = jnp.asarray(active, bool)
     st = proto.release_loc_b(cfg, st, active & (scope == LOCAL), addrs, vals)
     st = proto.release_glob_b(cfg, st, active & (scope == GLOBAL), addrs,
                               vals)
-    return _release_rem(proto, cfg, st, active & (scope == REMOTE), addrs,
-                        vals)
+    st = _release_rem(proto, cfg, st, active & (scope == REMOTE), addrs,
+                      vals)
+    return P.lease_clear(st, active)
 
 
 def load(cfg: P.ProtoConfig, st: P.Store, active, addrs, scope=LOCAL):

@@ -108,6 +108,40 @@ class ProtoConfig:
             else self.block_words
 
 
+class Lease(NamedTuple):
+    """Clock-stamped sync-word lease, one per cache (elastic alive-set PR).
+
+    `addr[i]` is the L2 sync word cache i's last acquire targeted (INVALID
+    once released) and `stamp[i]` the per-cache cycle clock at that
+    acquire.  The scoped ISA (`repro.core.ops`) stamps these on every
+    acquire/release as pure bookkeeping — no cycles, no counters — so the
+    zero-churn schedule stays bitwise identical.  `b_recover` reads the
+    lease to release a dead holder's sync word after its lease expires."""
+    addr: jnp.ndarray      # [n_caches] i32 held sync word, INVALID if none
+    stamp: jnp.ndarray     # [n_caches] f32 cycle clock at acquire
+
+
+def lease_make(n_caches: int) -> Lease:
+    return Lease(addr=jnp.full((n_caches,), INVALID),
+                 stamp=jnp.zeros((n_caches,), jnp.float32))
+
+
+def lease_stamp(st: "Store", active, addrs) -> "Store":
+    """Record an acquire: active lanes now hold `addrs` as of their clock."""
+    active = jnp.asarray(active, bool)
+    return st._replace(lease=Lease(
+        addr=jnp.where(active, jnp.asarray(addrs, jnp.int32), st.lease.addr),
+        stamp=jnp.where(active, st.counters.cycles, st.lease.stamp)))
+
+
+def lease_clear(st: "Store", active) -> "Store":
+    """Record a release: active lanes hold nothing."""
+    active = jnp.asarray(active, bool)
+    return st._replace(lease=Lease(
+        addr=jnp.where(active, INVALID, st.lease.addr),
+        stamp=jnp.where(active, 0.0, st.lease.stamp)))
+
+
 class Store(NamedTuple):
     l2: jnp.ndarray        # [n_blocks, W]
     l1: jnp.ndarray        # [n_caches, n_blocks, W]
@@ -116,6 +150,7 @@ class Store(NamedTuple):
     fifo: sfifo.SFifo      # leaves have leading [n_caches]
     lr: tables.LRTbl
     pa: tables.PATbl
+    lease: Lease           # clock-stamped sync-word leases (crash recovery)
     counters: Counters
 
 
@@ -132,6 +167,7 @@ def make_store(cfg: ProtoConfig) -> Store:
         fifo=stack(sfifo.make(cfg.fifo_cap)),
         lr=stack(tables.lr_make(cfg.lr_tbl)),
         pa=stack(tables.pa_make(cfg.pa_tbl)),
+        lease=lease_make(n),
         counters=make_counters(n),
     )
 
@@ -329,6 +365,34 @@ def b_invalidate(cfg: ProtoConfig, st: Store, mask) -> Store:
                    inv_full=c.inv_full + jnp.sum(fmask),
                    inv_per_cache=c.inv_per_cache + fmask)
     return st._replace(wvalid=wvalid, lr=lr, pa=pa, counters=c)
+
+
+def b_recover(cfg: ProtoConfig, st: Store, mask) -> Store:
+    """Crash-recovery drain for every cache in `mask` (dead agents whose
+    lease expired — elastic alive-set PR, DESIGN.md §10):
+
+      1. reclaim the dead cache's dirty words: full drain + writeback via
+         the existing flush machinery, then flash-invalidate and clear its
+         LR/PA entries (`b_invalidate` — a dead agent must never again be
+         probed as a sharer or promoted);
+      2. force-release its leased sync word at L2 (ST 0) so waiting remote
+         acquirers stop CAS-failing against a dead holder;
+      3. clear the lease and count one recovery per reclaimed cache.
+
+    With `mask` all-False this is value-preserving except for +0.0 counter
+    adds, but the elastic schedulers additionally guard the call under a
+    `lax.cond` so zero-churn runs never execute it at all."""
+    mask = jnp.asarray(mask, bool)
+    st = b_invalidate(cfg, st, mask)
+    la = st.lease.addr
+    rel = mask & (la >= 0)
+    st, _ = b_atomic_l2(cfg, st, rel, jnp.clip(la, 0),
+                        _fill(cfg, 0), _fill(cfg, 0), False)
+    st = lease_clear(st, mask)
+    c = st.counters
+    c = c._replace(recoveries=c.recoveries
+                   + jnp.sum(mask.astype(jnp.float32)))
+    return st._replace(counters=c)
 
 
 # --------------------------------------------------------------------------
@@ -881,6 +945,16 @@ class Protocol:
     # batched address-disjoint remote twins (capability; None = cannot)
     acquire_rem_b: callable = None
     release_rem_b: callable = None
+    # crash-recovery drain (capability; None = dead holders never recover):
+    # (cfg, st, mask) -> st — reclaim dirty words, force-release leased
+    # sync words, invalidate LR/PA of every masked (dead) cache.
+    recover_b: callable = None
+    # crash fault injection (faults.crash_holding_lock): (victim, at) —
+    # once cycles[victim] >= at, the victim's *synchronization*
+    # instructions (and their lease bookkeeping) stop executing, modeling
+    # death mid-turn inside a critical section: the lock stays held, the
+    # turn's data writes stay stranded dirty in its L1.  None = healthy.
+    crash_gate: tuple = None
 
     @property
     def remote_batchable(self) -> bool:
@@ -971,7 +1045,8 @@ SRSP = register_protocol(Protocol(
     acquire_glob_b=global_acquire_b, release_glob_b=global_release_b,
     acquire_glob=global_acquire, release_glob=global_release,
     acquire_rem_b=srsp_remote_acquire_b,
-    release_rem_b=srsp_remote_release_b))
+    release_rem_b=srsp_remote_release_b,
+    recover_b=b_recover))
 
 # Original RSP's remote promotion flushes/invalidates EVERY cache, so two
 # remote turns never commute: no batched remote twin, by declaration.
@@ -981,7 +1056,8 @@ RSP = register_protocol(Protocol(
     acquire_loc=local_acquire, release_loc=local_release,
     acquire_rem=rsp_remote_acquire, release_rem=rsp_remote_release,
     acquire_glob_b=global_acquire_b, release_glob_b=global_release_b,
-    acquire_glob=global_acquire, release_glob=global_release))
+    acquire_glob=global_acquire, release_glob=global_release,
+    recover_b=b_recover))
 
 # Baseline: every scope realized as global sync — remote twins are the
 # plain masked global ops (trivially address-disjoint-batchable).
@@ -992,7 +1068,8 @@ GLOBAL = register_protocol(Protocol(
     acquire_rem=global_acquire, release_rem=global_release,
     acquire_glob_b=global_acquire_b, release_glob_b=global_release_b,
     acquire_glob=global_acquire, release_glob=global_release,
-    acquire_rem_b=global_acquire_b, release_rem_b=global_release_b))
+    acquire_rem_b=global_acquire_b, release_rem_b=global_release_b,
+    recover_b=b_recover))
 
 # NOT remote-safe — realizes REMOTE scope as local sync (staleness demo).
 LOCAL_ONLY = register_protocol(Protocol(
@@ -1002,4 +1079,5 @@ LOCAL_ONLY = register_protocol(Protocol(
     acquire_rem=local_acquire, release_rem=local_release,
     acquire_glob_b=global_acquire_b, release_glob_b=global_release_b,
     acquire_glob=global_acquire, release_glob=global_release,
-    acquire_rem_b=local_acquire_b, release_rem_b=local_release_b))
+    acquire_rem_b=local_acquire_b, release_rem_b=local_release_b,
+    recover_b=b_recover))

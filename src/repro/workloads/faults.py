@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
+
 from repro.core import protocol as P
 
 
@@ -61,6 +63,54 @@ def serialize_remote(proto: P.Protocol) -> P.Protocol:
     and the sweep's remote-batch A/B pin exactly that."""
     return derive(proto, "serial_remote",
                   acquire_rem_b=None, release_rem_b=None)
+
+
+def crash_holding_lock(proto: P.Protocol, victim: int,
+                       at: float) -> P.Protocol:
+    """`proto` with agent `victim` dying *inside* a critical section at
+    clock `at`: from then on its release instructions (ops.py
+    `crash_gate`) never execute — acquires stay live, so the victim's
+    next critical section is entered but never exited.  The lock stays
+    held (its lease survives for recovery to force-release), no LR entry
+    is ever inserted, and the section's data writes stay stranded dirty
+    in its L1.  Pair with an elastic CRASH event a little *after* `at`
+    (enough slack for one victim turn) so the lock is provably taken
+    before the churn event retires the agent."""
+    return derive(proto, f"crash_lock@{victim}",
+                  crash_gate=(int(victim), float(at)))
+
+
+def crash_dirty(proto: P.Protocol, victim: int, at: float) -> P.Protocol:
+    """`proto` with agent `victim` dying at clock `at` *between* the data
+    publish and its visibility plumbing: local-scope releases after `at`
+    still write the released value into the victim's L1 (so its own
+    bookkeeping stays consistent) but skip the real release path — no
+    LR-TBL insert, so the next remote acquirer's selective-flush probe
+    cannot find the dirty words and survivors read stale values from L2.
+    Only the recovery drain's unconditional `b_invalidate` (which drains
+    ALL dirty words, LR-covered or not) reclaims them."""
+    inner = proto.release_loc_b
+    victim, at = int(victim), float(at)
+
+    def rel(cfg, st, active, addrs, vals):
+        active = jnp.asarray(active, bool)
+        lanes = jnp.arange(cfg.n_caches, dtype=jnp.int32)
+        dying = active & (lanes == victim) \
+            & (st.counters.cycles >= jnp.float32(at))
+        st = inner(cfg, st, active & ~dying, addrs, vals)
+        st, _ = P.b_store_word(cfg, st, dying, addrs, vals)
+        return st
+
+    return derive(proto, f"crash_dirty@{victim}", release_loc_b=rel)
+
+
+def lease_never_expires(proto: P.Protocol) -> P.Protocol:
+    """`proto` with the recovery capability stripped: a dead sharer's
+    promotion lease never expires, so the directory never reclaims its
+    lock/dirty words — the pre-lease wedge the elastic engines exist to
+    prevent.  The run still terminates (the elastic loop guard exits
+    when no live agent can act) but the self-check reports the loss."""
+    return derive(proto, "lease_never_expires", recover_b=None)
 
 
 # On the set-associative PA-TBL's silent LRU eviction (DESIGN.md §8):

@@ -168,6 +168,14 @@ class Workload:
     live: Callable
     remote_turn_b: Callable = None   # masked multi-agent remote turn
     remote_addr: Callable = None     # [n] i32 next-remote target address
+    # elastic alive-set hooks (DESIGN.md §10).  `retire(wl, s, dead, *ops)
+    # -> s'` forgives a dying agent's remaining obligations in the
+    # bookkeeping ground truth (quotas := done) so the run terminates and
+    # the self-check scores survivors only; it must be a bitwise identity
+    # when `dead` is all-False.  `admit(wl, s, joined, *ops) -> s'`
+    # optionally assigns new work to re-admitted agents.
+    retire: Callable = None          # masked retirement bookkeeping
+    admit: Callable = None           # masked (re-)admission bookkeeping
 
 
 def one_hot(n: int, wg) -> jnp.ndarray:
@@ -209,6 +217,76 @@ def run_serial(wl: Workload, state, *ops):
     return lax.while_loop(cond, body, state)
 
 
+def _batched_trip(wl: Workload, s, can_l, can_r, horizon, ops):
+    """One `run_batched` trip, given the trip's readiness masks.
+
+    `horizon` is the elastic engines' event fence: a turn at clock >=
+    horizon must not execute this trip (a churn event or lease expiry
+    fires first — DESIGN.md §10).  The plain engines pass None and the
+    masking disappears at trace time, keeping their schedule untouched."""
+    n = s.store.counters.cycles.shape[0]
+    wgs = jnp.arange(n, dtype=jnp.int32)
+    remote_cap = (wl.remote_turn_b is not None
+                  and wl.remote_addr is not None
+                  and wl.proto.remote_batchable)
+    clocks_all = s.store.counters.cycles
+    if not wl.has_remote:
+        # nothing ever conflicts: every ready agent acts each trip
+        if horizon is not None:
+            can_l = can_l & (clocks_all < horizon)
+        return wl.local_turn(wl, s, can_l, *ops)
+    cand = can_l | can_r
+    clocks = jnp.where(cand, clocks_all, BIG)
+    wg_min = jnp.argmin(clocks).astype(jnp.int32)
+    sclk = jnp.where(can_r, clocks_all, BIG)
+    ms = jnp.min(sclk)
+    js = jnp.argmin(sclk).astype(jnp.int32)
+    fence = jnp.min(jnp.where(can_l,
+                              clocks_all + wl.remote_bound(wl, s, *ops),
+                              BIG))
+    lex = (clocks_all < ms) | ((clocks_all == ms) & (wgs < js))
+    batch = can_l & lex & (clocks_all <= fence)
+    if horizon is not None:
+        batch = batch & (clocks_all < horizon)
+
+    def do_batch(st):
+        return wl.local_turn(wl, st, batch, *ops)
+
+    def do_serial(st):
+        return _serial_turn(wl, st, wg_min, can_l, ops)
+
+    if remote_cap:
+        def do_remote_or_serial(st):
+            # remote candidates preceding every local candidate's
+            # clock (same lex pattern as the local batch, mirrored)
+            lclk = jnp.where(can_l, clocks_all, BIG)
+            ml = jnp.min(lclk)
+            jl = jnp.argmin(lclk).astype(jnp.int32)
+            lexr = (clocks_all < ml) | ((clocks_all == ml) & (wgs < jl))
+            r0 = can_r & lexr
+            if horizon is not None:
+                r0 = r0 & (clocks_all < horizon)
+            raddr = wl.remote_addr(wl, st, *ops)
+            # address dedup: drop a lane iff an earlier (clock, idx)
+            # candidate targets the same address
+            collide = r0[:, None] & r0[None, :] \
+                & (raddr[:, None] == raddr[None, :])
+            earlier = (clocks_all[None, :] < clocks_all[:, None]) \
+                | ((clocks_all[None, :] == clocks_all[:, None])
+                   & (wgs[None, :] < wgs[:, None]))
+            rbatch = r0 & ~jnp.any(collide & earlier, axis=1)
+            return lax.cond(
+                jnp.any(rbatch),
+                lambda s2: wl.remote_turn_b(wl, s2, rbatch, *ops),
+                do_serial, st)
+
+        fallback = do_remote_or_serial
+    else:
+        fallback = do_serial
+
+    return lax.cond(jnp.any(batch), do_batch, fallback, s)
+
+
 @partial(jax.jit, static_argnums=(0,), **_don)
 def run_batched(wl: Workload, state, *ops):
     """Vectorized scheduler: every provably-commuting local turn per trip.
@@ -227,68 +305,14 @@ def run_batched(wl: Workload, state, *ops):
     (the earlier lane keeps it; the later retries next trip).  Otherwise
     the trip falls back to one serial turn — remote turns execute alone,
     exactly at their serial position."""
-    n = state.store.counters.cycles.shape[0]
-    wgs = jnp.arange(n, dtype=jnp.int32)
-    remote_cap = (wl.remote_turn_b is not None
-                  and wl.remote_addr is not None
-                  and wl.proto.remote_batchable)
 
     def cond(s):
         return wl.live(wl, s, *ops)
 
     def body(s):
         can_l = wl.can_local(wl, s, *ops)
-        if not wl.has_remote:
-            # nothing ever conflicts: every ready agent acts each trip
-            return wl.local_turn(wl, s, can_l, *ops)
-        can_r = wl.can_remote(wl, s, *ops)
-        clocks_all = s.store.counters.cycles
-        cand = can_l | can_r
-        clocks = jnp.where(cand, clocks_all, BIG)
-        wg_min = jnp.argmin(clocks).astype(jnp.int32)
-        sclk = jnp.where(can_r, clocks_all, BIG)
-        ms = jnp.min(sclk)
-        js = jnp.argmin(sclk).astype(jnp.int32)
-        fence = jnp.min(jnp.where(can_l,
-                                  clocks_all + wl.remote_bound(wl, s, *ops),
-                                  BIG))
-        lex = (clocks_all < ms) | ((clocks_all == ms) & (wgs < js))
-        batch = can_l & lex & (clocks_all <= fence)
-
-        def do_batch(st):
-            return wl.local_turn(wl, st, batch, *ops)
-
-        def do_serial(st):
-            return _serial_turn(wl, st, wg_min, can_l, ops)
-
-        if remote_cap:
-            def do_remote_or_serial(st):
-                # remote candidates preceding every local candidate's
-                # clock (same lex pattern as the local batch, mirrored)
-                lclk = jnp.where(can_l, clocks_all, BIG)
-                ml = jnp.min(lclk)
-                jl = jnp.argmin(lclk).astype(jnp.int32)
-                lexr = (clocks_all < ml) | ((clocks_all == ml) & (wgs < jl))
-                r0 = can_r & lexr
-                raddr = wl.remote_addr(wl, st, *ops)
-                # address dedup: drop a lane iff an earlier (clock, idx)
-                # candidate targets the same address
-                collide = r0[:, None] & r0[None, :] \
-                    & (raddr[:, None] == raddr[None, :])
-                earlier = (clocks_all[None, :] < clocks_all[:, None]) \
-                    | ((clocks_all[None, :] == clocks_all[:, None])
-                       & (wgs[None, :] < wgs[:, None]))
-                rbatch = r0 & ~jnp.any(collide & earlier, axis=1)
-                return lax.cond(
-                    jnp.any(rbatch),
-                    lambda s2: wl.remote_turn_b(wl, s2, rbatch, *ops),
-                    do_serial, st)
-
-            fallback = do_remote_or_serial
-        else:
-            fallback = do_serial
-
-        return lax.cond(jnp.any(batch), do_batch, fallback, s)
+        can_r = wl.can_remote(wl, s, *ops) if wl.has_remote else None
+        return _batched_trip(wl, s, can_l, can_r, None, ops)
 
     return lax.while_loop(cond, body, state)
 
@@ -301,6 +325,216 @@ def run_batched_many(wl: Workload, states, *ops):
     cell — the sweep's few-compilations path.  Finished replicas no-op
     (every turn is internally guarded) while stragglers drain."""
     return jax.vmap(lambda s: run_batched.__wrapped__(wl, s, *ops))(states)
+
+
+# --------------------------------------------------------------------------
+# Elastic alive-set scheduling (DESIGN.md §10).
+#
+# The plain engines assume a static agent set; production sharing tiers see
+# churn.  The elastic engines wrap any workload state in an `ElasticState`
+# carrying an alive mask, and replay a seeded `ChurnSchedule` of
+# join/leave/crash events against it mid-run:
+#
+#   * a churn event at clock T serializes against every turn at clock >= T
+#     — in BOTH engines, so serial/batched stay bitwise identical under
+#     churn.  The batched trip simply fences its batch at the event
+#     horizon (`_batched_trip(horizon=...)`).
+#   * LEAVE retires the agent (the workload's `retire` hook forgives its
+#     remaining obligations) and reclaims its caches immediately.
+#   * CRASH retires the agent but the directory may only reclaim once the
+#     agent's clock-stamped lease (ops.acquire/release stamp it) expires:
+#     recovery fires at T + lease via `Protocol.recover_b` — drain the dead
+#     agent's dirty words through the existing writeback machinery,
+#     force-release its leased sync word at L2, invalidate its PA/LR
+#     entries.  A protocol with `recover_b=None` (faults.lease_never_expires)
+#     never reclaims: survivors observe whatever the crash stranded.
+#   * JOIN re-admits the agent (the workload's `admit` hook may assign it
+#     new work).  Schedule JOINs for crashed agents only after their lease
+#     expired — re-admitting an unreclaimed cache is the operator's hazard.
+#
+# Zero churn is bitwise-exact: an empty schedule keeps every event horizon
+# at BIG, the fences reduce to `clock < BIG` (always true for f32 cycle
+# clocks), the alive mask stays all-True (`can & True == can`), and the
+# fire branch of the lax.cond never executes.
+# --------------------------------------------------------------------------
+
+LEAVE, CRASH, JOIN = 0, 1, 2
+KIND_CODES = {"leave": LEAVE, "crash": CRASH, "join": JOIN}
+
+
+class ChurnSchedule(NamedTuple):
+    """Seeded churn event stream, carried as a scheduler op (traced)."""
+    clock: jnp.ndarray   # [k] f32 fire time (BIG = padding, never fires)
+    agent: jnp.ndarray   # [k] i32 subject agent
+    kind: jnp.ndarray    # [k] i32 LEAVE / CRASH / JOIN
+    lease: jnp.ndarray   # [] f32 promotion/lock-hold lease (cycles)
+
+
+class ElasticState(NamedTuple):
+    """Workload state + alive-set bookkeeping threaded through the run."""
+    s: Any                   # workload state (first field is the Store)
+    alive: jnp.ndarray       # [n] bool scheduling-eligible agents
+    recover_at: jnp.ndarray  # [n] f32 pending reclaim clock (BIG = none)
+    fired: jnp.ndarray       # [k] bool churn events already replayed
+
+
+def make_churn(events=(), lease=0.0) -> ChurnSchedule:
+    """Build a schedule from (clock, agent, kind) triples; kind is a
+    KIND_CODES string or int code.  Always at least one (inert) entry so
+    the event-horizon reductions never see a zero-length axis."""
+    k = max(len(events), 1)
+    clock = [float(BIG)] * k
+    agent = [0] * k
+    kind = [LEAVE] * k
+    for j, (t, a, kd) in enumerate(events):
+        clock[j] = float(t)
+        agent[j] = int(a)
+        kind[j] = KIND_CODES[kd] if isinstance(kd, str) else int(kd)
+    return ChurnSchedule(clock=jnp.asarray(clock, jnp.float32),
+                         agent=jnp.asarray(agent, jnp.int32),
+                         kind=jnp.asarray(kind, jnp.int32),
+                         lease=jnp.asarray(float(lease), jnp.float32))
+
+
+def make_elastic(bench: Bench, events=(), lease=0.0) -> Bench:
+    """Wrap a Bench for the elastic engines: ElasticState state, the
+    churn schedule prepended to ops, check unwrapped to the inner state."""
+    sched = make_churn(events, lease)
+    n = bench.state.store.counters.cycles.shape[0]
+    es = ElasticState(s=bench.state,
+                      alive=jnp.ones((n,), bool),
+                      recover_at=jnp.full((n,), BIG),
+                      fired=sched.clock >= BIG)
+    return Bench(bench.wl, es, (sched,) + bench.ops,
+                 lambda final: bench.check(final.s))
+
+
+def _elastic_ready(wl: Workload, es: ElasticState, ops):
+    """Alive-masked readiness: dead agents never act (can_r all-False for
+    workloads without remote turns)."""
+    can_l = wl.can_local(wl, es.s, *ops) & es.alive
+    if wl.has_remote:
+        can_r = wl.can_remote(wl, es.s, *ops) & es.alive
+    else:
+        can_r = jnp.zeros_like(es.alive)
+    return can_l, can_r
+
+
+def _event_horizon(sched: ChurnSchedule, es: ElasticState) -> jnp.ndarray:
+    """Earliest unfired churn event or pending lease reclaim (BIG: none)."""
+    ec = jnp.min(jnp.where(es.fired, BIG, sched.clock))
+    return jnp.minimum(ec, jnp.min(es.recover_at))
+
+
+def _fire_events(wl: Workload, sched: ChurnSchedule, es: ElasticState,
+                 mcc, ops) -> ElasticState:
+    """Replay every churn event and lease reclaim due at clock <= `mcc`
+    (the next turn's clock).  Events replay in schedule order — the same
+    deterministic position in both engines."""
+    s, alive, recover_at, fired = es
+    n = alive.shape[0]
+    due = ~fired & (sched.clock <= mcc)
+
+    def step(carry, j):
+        s, alive, recover_at = carry
+        hot = one_hot(n, sched.agent[j]) & due[j]
+        kind = sched.kind[j]
+        dead = hot & (kind != JOIN)
+        join = hot & (kind == JOIN)
+        if wl.retire is not None:
+            s = wl.retire(wl, s, dead, *ops)
+        if wl.admit is not None:
+            s = wl.admit(wl, s, join, *ops)
+        alive = (alive & ~dead) | join
+        # a clean LEAVE may be reclaimed at once; a CRASH's promotion
+        # lease must first expire before the directory touches its state
+        due_at = jnp.where(kind == CRASH, sched.clock[j] + sched.lease,
+                           sched.clock[j])
+        recover_at = jnp.where(dead, due_at, recover_at)
+        return (s, alive, recover_at), None
+
+    (s, alive, recover_at), _ = lax.scan(
+        step, (s, alive, recover_at),
+        jnp.arange(sched.clock.shape[0]))
+    fired = fired | due
+    reclaim = (recover_at <= mcc) & (recover_at < BIG)
+    if wl.proto.recover_b is not None:
+        s = lax.cond(
+            jnp.any(reclaim),
+            lambda st: st._replace(store=wl.proto.recover_b(
+                wl.cfg.proto_cfg(), st.store, reclaim)),
+            lambda st: st, s)
+    # cleared even when recover_b is None: the reclaim point passed and
+    # nothing happened — that IS the lease_never_expires semantics, and
+    # leaving it pending would spin the scheduler forever
+    recover_at = jnp.where(reclaim, BIG, recover_at)
+    return ElasticState(s, alive, recover_at, fired)
+
+
+def _elastic_cond(wl: Workload, sched: ChurnSchedule, es: ElasticState,
+                  ops):
+    """Loop guard: work remains AND progress is possible — a live agent
+    can act, or an event/reclaim is still due to fire.  Unlike the plain
+    engines this cannot rely on `live` alone: a crashed agent's
+    unforgivable leftovers (e.g. a dead queue nobody may steal from)
+    would otherwise wedge the loop; here the run terminates and the
+    self-check reports the loss instead."""
+    can_l, can_r = _elastic_ready(wl, es, ops)
+    pending = _event_horizon(sched, es) < BIG
+    return wl.live(wl, es.s, *ops) & (jnp.any(can_l | can_r) | pending)
+
+
+@partial(jax.jit, static_argnums=(0,), **_don)
+def run_serial_elastic(wl: Workload, es: ElasticState,
+                       sched: ChurnSchedule, *ops):
+    """`run_serial` over a churn-varying alive-set.  With an empty
+    schedule the trip sequence is bitwise identical to `run_serial`."""
+
+    def cond(e):
+        return _elastic_cond(wl, sched, e, ops)
+
+    def body(e):
+        can_l, can_r = _elastic_ready(wl, e, ops)
+        clocks = jnp.where(can_l | can_r, e.s.store.counters.cycles, BIG)
+        mcc = jnp.min(clocks)
+        wg = jnp.argmin(clocks).astype(jnp.int32)
+        ec = _event_horizon(sched, e)
+        return lax.cond(
+            (ec <= mcc) & (ec < BIG),
+            lambda e2: _fire_events(wl, sched, e2, mcc, ops),
+            lambda e2: e2._replace(
+                s=_serial_turn(wl, e2.s, wg, can_l, ops)),
+            e)
+
+    return lax.while_loop(cond, body, es)
+
+
+@partial(jax.jit, static_argnums=(0,), **_don)
+def run_batched_elastic(wl: Workload, es: ElasticState,
+                        sched: ChurnSchedule, *ops):
+    """`run_batched` over a churn-varying alive-set: the trip is fenced
+    at the event horizon so no turn at clock >= the next event executes
+    before the event fires — the reordering argument of DESIGN.md §4/§9
+    then applies span-by-span between events.  With an empty schedule the
+    trip sequence is bitwise identical to `run_batched`."""
+
+    def cond(e):
+        return _elastic_cond(wl, sched, e, ops)
+
+    def body(e):
+        can_l, can_r = _elastic_ready(wl, e, ops)
+        clocks = jnp.where(can_l | can_r, e.s.store.counters.cycles, BIG)
+        mcc = jnp.min(clocks)
+        ec = _event_horizon(sched, e)
+        cr = can_r if wl.has_remote else None
+        return lax.cond(
+            (ec <= mcc) & (ec < BIG),
+            lambda e2: _fire_events(wl, sched, e2, mcc, ops),
+            lambda e2: e2._replace(
+                s=_batched_trip(wl, e2.s, can_l, cr, ec, ops)),
+            e)
+
+    return lax.while_loop(cond, body, es)
 
 
 # Engine registry: unknown names raise with the registered list.
@@ -319,6 +553,8 @@ def engines() -> tuple:
 
 register_engine("serial", run_serial)
 register_engine("batched", run_batched)
+register_engine("serial_elastic", run_serial_elastic)
+register_engine("batched_elastic", run_batched_elastic)
 
 
 def runner(engine: str):
@@ -351,4 +587,5 @@ def counters_dict(st: P.Store) -> dict:
         "steals": float(c.steals),
         "l1_hits": float(c.l1_hits),
         "l1_misses": float(c.l1_misses),
+        "recoveries": float(c.recoveries),
     }

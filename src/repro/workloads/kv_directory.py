@@ -115,6 +115,29 @@ def _live(wl, s: KVState):
     return work & (s.rounds < _max_events(wl.cfg))
 
 
+def _retire(wl, s: KVState, dead, *ops) -> KVState:
+    """Elastic retirement (DESIGN.md §10): a dead owner stops owing
+    updates and lookups — its buckets keep their bookkept ver/val ground
+    truth, so the post-run drained-L2 audit still checks every committed
+    update.  Bitwise identity when `dead` is all-False."""
+    dead = jnp.asarray(dead, bool)
+    return s._replace(
+        upd_quota=jnp.where(dead, jnp.minimum(s.upd_quota, s.upd_done),
+                            s.upd_quota),
+        look_done=jnp.where(dead,
+                            jnp.maximum(s.look_done,
+                                        jnp.int32(wl.cfg.lookups_per_agent)),
+                            s.look_done))
+
+
+def _admit(wl, s: KVState, join, *ops) -> KVState:
+    """Elastic (re-)admission: a joining owner owes one more update to
+    its shard."""
+    join = jnp.asarray(join, bool)
+    return s._replace(
+        upd_quota=jnp.where(join, s.upd_done + 1, s.upd_quota))
+
+
 def _delta(lanes, upd_done, salt):
     return (lanes + 1) + jnp.mod(upd_done * 7 + salt, jnp.int32(5))
 
@@ -198,7 +221,8 @@ def build_workload(cfg: Config, proto: P.Protocol) -> harness.Workload:
         name="kv_directory", cfg=cfg, proto=proto, has_remote=True,
         can_local=_can_local, can_remote=_can_remote,
         local_turn=_local_turn, remote_turn=_remote_turn,
-        remote_bound=_remote_bound, live=_live)
+        remote_bound=_remote_bound, live=_live,
+        retire=_retire, admit=_admit)
 
 
 def init_state(wl, seed) -> KVState:

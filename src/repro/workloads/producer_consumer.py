@@ -172,6 +172,35 @@ def _live(wl, s: PCState):
     return jnp.any(s.consumed < s.quota) & (s.rounds < _max_events(wl.cfg))
 
 
+def _retire(wl, s: PCState, dead, *ops) -> PCState:
+    """Elastic retirement (DESIGN.md §10): a dead producer stops owing
+    items (quota := produced — its already-produced items still get
+    drained and audited); a dead consumer orphans its partition, so those
+    producers' undrained obligations are forgiven too (the post-run
+    drain_all audit still checks every produced item at L2).  Bitwise
+    identity when `dead` is all-False."""
+    cfg = wl.cfg
+    dead = jnp.asarray(dead, bool)
+    cons = _is_consumer(cfg)
+    orphan = ~cons & (dead & cons)[jnp.mod(_lanes(cfg),
+                                           jnp.int32(cfg.n_consumers))]
+    fold = (dead & ~cons) | orphan
+    quota = jnp.where(fold, jnp.minimum(s.quota, s.produced), s.quota)
+    consumed = jnp.where(orphan, jnp.maximum(s.consumed, quota), s.consumed)
+    return s._replace(quota=quota, consumed=consumed)
+
+
+def _admit(wl, s: PCState, join, *ops) -> PCState:
+    """Elastic (re-)admission: a joining producer owes one more item
+    (bounded by the static ring capacity)."""
+    cfg = wl.cfg
+    join = jnp.asarray(join, bool) & ~_is_consumer(cfg)
+    quota = jnp.where(join,
+                      jnp.minimum(s.produced + 1, jnp.int32(cfg.max_items)),
+                      s.quota)
+    return s._replace(quota=quota)
+
+
 def _local_turn(wl, s: PCState, mask) -> PCState:
     cfg = wl.cfg
     pc = cfg.proto_cfg()
@@ -264,7 +293,8 @@ def build_workload(cfg: Config, proto: P.Protocol) -> harness.Workload:
         can_local=_can_local, can_remote=_can_remote,
         local_turn=_local_turn, remote_turn=_remote_turn,
         remote_bound=_remote_bound, live=_live,
-        remote_turn_b=_remote_turn_b, remote_addr=_remote_addr)
+        remote_turn_b=_remote_turn_b, remote_addr=_remote_addr,
+        retire=_retire, admit=_admit)
 
 
 def init_state(wl, seed) -> PCState:

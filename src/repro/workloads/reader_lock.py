@@ -72,6 +72,8 @@ class RLState(NamedTuple):
     reads_done: jnp.ndarray   # [n] i32 per-reader completed reads
     credit: jnp.ndarray       # [n] i32 scratch turns before next read
     gapv: jnp.ndarray         # [n] i32 per-reader (seed-jittered) gap
+    w_target: jnp.ndarray     # [] i32 writer obligation (elastic retire)
+    r_target: jnp.ndarray     # [n] i32 per-reader obligation (elastic)
     check_fails: jnp.ndarray  # [] i32
     rounds: jnp.ndarray       # [] i32
 
@@ -88,15 +90,13 @@ def _lanes(cfg: Config):
 def _can_local(wl, s: RLState):
     cfg = wl.cfg
     lanes = _lanes(cfg)
-    reader = (s.reads_done < cfg.reads_per_reader) & (s.credit > 0)
-    return jnp.where(lanes == 0, s.writes_done < cfg.n_writes, reader)
+    reader = (s.reads_done < s.r_target) & (s.credit > 0)
+    return jnp.where(lanes == 0, s.writes_done < s.w_target, reader)
 
 
 def _can_remote(wl, s: RLState):
-    cfg = wl.cfg
-    lanes = _lanes(cfg)
-    return (lanes > 0) & (s.reads_done < cfg.reads_per_reader) \
-        & (s.credit == 0)
+    lanes = _lanes(wl.cfg)
+    return (lanes > 0) & (s.reads_done < s.r_target) & (s.credit == 0)
 
 
 def _remote_bound(wl, s: RLState):
@@ -109,9 +109,35 @@ def _remote_bound(wl, s: RLState):
 def _live(wl, s: RLState):
     cfg = wl.cfg
     lanes = _lanes(cfg)
-    work = (s.writes_done < cfg.n_writes) \
-        | jnp.any((lanes > 0) & (s.reads_done < cfg.reads_per_reader))
+    work = (s.writes_done < s.w_target) \
+        | jnp.any((lanes > 0) & (s.reads_done < s.r_target))
     return work & (s.rounds < _max_events(cfg))
+
+
+def _retire(wl, s: RLState, dead, *ops) -> RLState:
+    """Elastic retirement (DESIGN.md §10): a dead writer stops owing
+    versions (the payload audit compares against the bookkept
+    `writes_done`, so already-published versions are still checked); a
+    dead reader stops owing reads.  Bitwise identity for all-False
+    `dead`."""
+    dead = jnp.asarray(dead, bool)
+    return s._replace(
+        w_target=jnp.where(dead[0],
+                           jnp.minimum(s.w_target, s.writes_done),
+                           s.w_target),
+        r_target=jnp.where(dead, jnp.minimum(s.r_target, s.reads_done),
+                           s.r_target))
+
+
+def _admit(wl, s: RLState, join, *ops) -> RLState:
+    """Elastic (re-)admission: a joining writer owes one more version, a
+    joining reader one more read."""
+    join = jnp.asarray(join, bool)
+    lanes = _lanes(wl.cfg)
+    return s._replace(
+        w_target=jnp.where(join[0], s.writes_done + 1, s.w_target),
+        r_target=jnp.where(join & (lanes > 0), s.reads_done + 1,
+                           s.r_target))
 
 
 def _local_turn(wl, s: RLState, mask) -> RLState:
@@ -143,6 +169,7 @@ def _local_turn(wl, s: RLState, mask) -> RLState:
         reads_done=s.reads_done,
         credit=s.credit - rmask.astype(jnp.int32),
         gapv=s.gapv,
+        w_target=s.w_target, r_target=s.r_target,
         check_fails=s.check_fails,
         rounds=s.rounds + jnp.sum(mask.astype(jnp.int32)))
 
@@ -170,6 +197,7 @@ def _remote_turn(wl, s: RLState, wg) -> RLState:
             reads_done=s.reads_done.at[wg].add(1),
             credit=s.credit.at[wg].set(s.gapv[wg]),
             gapv=s.gapv,
+            w_target=s.w_target, r_target=s.r_target,
             check_fails=s.check_fails + fails,
             rounds=s.rounds + 1)
 
@@ -184,7 +212,8 @@ def build_workload(cfg: Config, proto: P.Protocol) -> harness.Workload:
         name="reader_lock", cfg=cfg, proto=proto, has_remote=True,
         can_local=_can_local, can_remote=_can_remote,
         local_turn=_local_turn, remote_turn=_remote_turn,
-        remote_bound=_remote_bound, live=_live)
+        remote_bound=_remote_bound, live=_live,
+        retire=_retire, admit=_admit)
 
 
 def init_state(wl, seed) -> RLState:
@@ -200,6 +229,9 @@ def init_state(wl, seed) -> RLState:
         reads_done=jnp.zeros((n,), jnp.int32),
         credit=gapv.copy(),  # distinct buffer: the state is donated
         gapv=gapv,
+        w_target=jnp.int32(cfg.n_writes),
+        r_target=jnp.where(lanes == 0, 0,
+                           cfg.reads_per_reader).astype(jnp.int32),
         check_fails=jnp.int32(0),
         rounds=jnp.int32(0))
 
@@ -209,11 +241,14 @@ def self_check(wl, final: RLState) -> dict:
     cfg = wl.cfg
     pc = cfg.proto_cfg()
     fails = int(final.check_fails)
-    done = int(final.writes_done) >= cfg.n_writes and bool(
-        np.all(np.asarray(final.reads_done)[1:] >= cfg.reads_per_reader))
+    done = int(final.writes_done) >= int(final.w_target) and bool(
+        np.all(np.asarray(final.reads_done)[1:]
+               >= np.asarray(final.r_target)[1:]))
     st = harness.drain_all(pc, final.store)
     l2 = np.asarray(st.l2).reshape(-1)
-    fails += int(np.sum(l2[2:2 + cfg.payload_w] != cfg.n_writes))
+    # audit against the bookkept publish count, not the static config —
+    # an elastically retired writer legitimately stops short
+    fails += int(np.sum(l2[2:2 + cfg.payload_w] != int(final.writes_done)))
     return {"ok": fails == 0 and done, "check_fails": fails,
             "done": done, "events": int(final.rounds)}
 

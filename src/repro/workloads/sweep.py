@@ -37,6 +37,15 @@ Schema v3 additions (benchmarks/SCHEMA.md): per-run `table_geometry`
 (LR/PA sets×ways) and top-level `packed_metadata`, plus the `pack_ab`
 section.
 
+Schema v5 additions (elastic alive-set PR, DESIGN.md §10): per-run
+churn columns (`churn_events`, `churn_rate`, `recovered`,
+`lost_updates`) plus ONE churned robustness cell — the worksteal srsp
+bench under a pinned die-holding-lock crash on the batched elastic
+engine, which must complete via the lease-expiry recovery drain with
+zero lost updates among survivors.  Every cell also runs under a
+per-cell hang watchdog (runtime/fault.py StepTimer + Heartbeat +
+interrupt timer; `REPRO_NO_WATCHDOG=1` disables).
+
 Schema v4 additions (scope-parametric ISA PR, DESIGN.md §9): per-run
 `api` ("scoped" — every workload issues ops through `repro.core.ops`)
 and `remote_batch` (whether the workload×protocol pair can co-schedule
@@ -52,15 +61,17 @@ Usage:
       [--workloads all] [--scenarios baseline scope_only rsp srsp]
       [--sizes 16 64] [--seeds 2] [--iters 2] [--no-donation]
       [--donation-sizes 64 256] [--no-pack-ab] [--pack-sizes 64 256]
-      [--no-remote-batch-ab] [--out BENCH_workloads.json]
+      [--no-remote-batch-ab] [--no-churn] [--out BENCH_workloads.json]
 """
 from __future__ import annotations
 
+import _thread
 import argparse
 import json
 import os
 import subprocess
 import sys
+import threading
 import time
 
 import numpy as np
@@ -74,10 +85,59 @@ import jax.numpy as jnp
 
 from repro import workloads
 from repro.core import protocol as P
+from repro.runtime import fault as rtfault
 from repro.workloads import faults, harness
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 DEFAULT_SCENARIOS = ["baseline", "scope_only", "rsp", "srsp"]
+
+# per-cell hang budget for the watchdog (seconds)
+WATCHDOG_S = float(os.environ.get("REPRO_WATCHDOG_S", "600"))
+
+
+class CellWatchdog:
+    """Per-cell hang watchdog — runtime/fault.py wired into the sweep.
+
+    A `Heartbeat` file records sweep liveness for outside watchers, a
+    `StepTimer` flags straggler cells (z-score over the cell history),
+    and a `threading.Timer` interrupts the main thread if a single cell
+    exceeds WATCHDOG_S — a wedged `while_loop` (e.g. a crash injection
+    without its recovery drain) fails the sweep loudly instead of
+    hanging CI.  `REPRO_NO_WATCHDOG=1` disables everything (debuggers,
+    profilers, very slow boxes)."""
+
+    def __init__(self, heartbeat_path: str = ".sweep_heartbeat"):
+        self.enabled = os.environ.get("REPRO_NO_WATCHDOG", "0") != "1"
+        self.timer = rtfault.StepTimer(window=50, z_thresh=3.0)
+        self.hb = rtfault.Heartbeat(heartbeat_path, interval=5.0)
+        self.cells = 0
+        self.label = "?"
+        self._t = None
+
+    def start(self, label: str):
+        self.label = label
+        if not self.enabled:
+            return
+        self.timer.start()
+        self.hb.beat(self.cells)
+        self._t = threading.Timer(WATCHDOG_S, self._fire)
+        self._t.daemon = True
+        self._t.start()
+
+    def _fire(self):
+        print(f"WATCHDOG: cell {self.label} exceeded {WATCHDOG_S:.0f}s "
+              f"budget — interrupting the sweep", file=sys.stderr, flush=True)
+        _thread.interrupt_main()
+
+    def stop(self):
+        self.cells += 1
+        if not self.enabled:
+            return
+        self._t.cancel()
+        dt, straggler = self.timer.stop()
+        if straggler:
+            print(f"watchdog: straggler cell {self.label} ({dt:.1f}s, "
+                  f"z>{self.timer.z_thresh})", flush=True)
 
 
 def _lane0(tree):
@@ -99,6 +159,19 @@ def _api_cols(wl) -> dict:
             "remote_batch": bool(wl.remote_turn_b is not None
                                  and wl.remote_addr is not None
                                  and wl.proto.remote_batchable)}
+
+
+def _churn_cols(churn_events=0, makespan=0.0, recovered=0.0,
+                lost_updates=0) -> dict:
+    """Schema-v5 columns (DESIGN.md §10): churn_events fired during the
+    run, churn_rate per 1k modeled cycles, agents reclaimed by recovery
+    drains, and updates lost among survivors (must be 0 when recovery is
+    on).  Zero-churn grid cells carry literal zeros."""
+    rate = 1e3 * churn_events / makespan if makespan else 0.0
+    return {"churn_events": int(churn_events),
+            "churn_rate": round(rate, 5),
+            "recovered": float(recovered),
+            "lost_updates": int(lost_updates)}
 
 
 def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
@@ -138,6 +211,7 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
         "compile_s": round(compile_s, 4),
         "steady_s_per_run": round(steady, 5),
         "steady_s_per_replica": round(steady / n_seeds, 5),
+        **_churn_cols(),
         "events": int(lane.rounds),
         "check_ok": all(c["ok"] for c in checks),
         "check_fails": int(sum(c["check_fails"] for c in checks)),
@@ -173,6 +247,7 @@ def measure_host_init(mod, name, scenario, n_agents, iters):
         "compile_s": round(compile_s, 4),
         "steady_s_per_run": round(float(np.mean(times)), 5),
         "steady_s_per_replica": round(float(np.mean(times)), 5),
+        **_churn_cols(),
         "events": int(out.rounds),
         "check_ok": bool(check["ok"]),
         "check_fails": int(check["check_fails"]),
@@ -252,6 +327,58 @@ def measure_pack(n_wgs, iters, packed: bool):
     return rec
 
 
+# ---------------- churned robustness cell (schema v5, DESIGN.md §10) -------
+
+def measure_churned_cell(iters):
+    """The worksteal srsp bench with a pinned die-holding-lock crash
+    (faults.crash_holding_lock, victim 0 at clock 5; CRASH churn event at
+    clock 400 — tests/test_churn.py pins the same numbers) run on the
+    batched ELASTIC engine.  srsp must COMPLETE despite the crash: the
+    lease-expiry recovery drain reclaims the dead owner's dirty words and
+    force-releases its leased lock, after which thieves drain its queue.
+    `recovered` counts reclaimed agents, `lost_updates` check failures
+    among survivors (must be 0 with recovery on)."""
+    mod = workloads.get("worksteal")
+    victim, at, evt = 0, 5.0, 400.0
+    proto = faults.crash_holding_lock(P.get_protocol("srsp"), victim, at)
+
+    def one():
+        b = mod.build("srsp", 4, seed=3, proto=proto, n_chunks_max=12)
+        eb = harness.make_elastic(b, events=[(evt, victim, "crash")])
+        fin = harness.run_batched_elastic(eb.wl, eb.state, *eb.ops)
+        jax.block_until_ready(fin.s.store.counters.cycles)
+        return b.wl, fin, eb.check(fin)
+
+    t0 = time.perf_counter()
+    wl, fin, check = one()
+    compile_s = time.perf_counter() - t0
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        wl, fin, check = one()
+        times.append(time.perf_counter() - t0)
+
+    counters = harness.counters_dict(fin.s.store)
+    recovered = float(np.sum(np.asarray(fin.s.store.counters.recoveries)))
+    return {
+        "workload": "worksteal", "scenario": "srsp", "n_agents": 4,
+        "engine": "batched_elastic", "vmapped": False, "n_replicas": 1,
+        "table_geometry": _geometry(wl), **_api_cols(wl),
+        "iters_timed": iters,
+        "compile_s": round(compile_s, 4),
+        "steady_s_per_run": round(float(np.mean(times)), 5),
+        "steady_s_per_replica": round(float(np.mean(times)), 5),
+        **_churn_cols(churn_events=1, makespan=counters["makespan"],
+                      recovered=recovered,
+                      lost_updates=check["check_fails"]),
+        "events": int(check["events"]),
+        "check_ok": bool(check["ok"]),
+        "check_fails": int(check["check_fails"]),
+        "makespan": counters["makespan"],
+        "counters": counters,
+    }
+
+
 # ---------------- remote-batch A/B (schema v4, DESIGN.md §9) ---------------
 
 def measure_remote_batch(n_agents, n_seeds, iters, batched: bool):
@@ -317,11 +444,14 @@ def main(argv=None):
                     help="skip the batched-vs-serialized remote-turn A/B")
     ap.add_argument("--remote-batch-sizes", nargs="+", type=int,
                     default=[16, 64])
+    ap.add_argument("--no-churn", action="store_true",
+                    help="skip the churned crash-recovery cell")
     ap.add_argument("--out", default="BENCH_workloads.json")
     args = ap.parse_args(argv)
 
     names = workloads.available() if args.workloads == ["all"] \
         else args.workloads
+    wd = CellWatchdog()
 
     runs = []
     for name in names:
@@ -329,12 +459,14 @@ def main(argv=None):
         for n_agents in args.sizes:
             for scen in args.scenarios:
                 t0 = time.perf_counter()
+                wd.start(f"{name}/{scen}/n={n_agents}")
                 if mod.VMAPPABLE:
                     rec = measure_vmapped(mod, name, scen, n_agents,
                                           args.seeds, args.iters)
                 else:
                     rec = measure_host_init(mod, name, scen, n_agents,
                                             args.iters)
+                wd.stop()
                 rec["bench_wall_s"] = round(time.perf_counter() - t0, 2)
                 runs.append(rec)
                 print(f"{name}/{scen}/n={n_agents}: "
@@ -344,15 +476,32 @@ def main(argv=None):
                       f"check_ok={rec['check_ok']}", flush=True)
             jax.clear_caches()   # per-size programs are large on CPU
 
+    if not args.no_churn:
+        wd.start("worksteal/srsp+crash/churned")
+        rec = measure_churned_cell(args.iters)
+        wd.stop()
+        runs.append(rec)
+        print(f"churned worksteal/srsp (crash victim 0): "
+              f"check_ok={rec['check_ok']} recovered={rec['recovered']:.0f} "
+              f"lost_updates={rec['lost_updates']} "
+              f"churn_rate={rec['churn_rate']}/kcycle", flush=True)
+        jax.clear_caches()
+
     def find(name, scen, n):
         for r in runs:
             if (r["workload"], r["scenario"], r["n_agents"]) == \
-                    (name, scen, n):
+                    (name, scen, n) and not r["churn_events"]:
                 return r
         return None
 
     # paper-style protocol comparisons on modeled makespan + L2 traffic
     comparisons = {}
+    churned = [r for r in runs if r["churn_events"]]
+    for r in churned:
+        comparisons[f"churn/{r['workload']}/n={r['n_agents']}"] = {
+            "completes_under_crash": bool(r["check_ok"]),
+            "recovered": r["recovered"],
+            "lost_updates": r["lost_updates"]}
     for name in names:
         for n in args.sizes:
             srsp = find(name, "srsp", n)
@@ -468,7 +617,15 @@ def main(argv=None):
                        "commutation rule in vivo); its wall-clock "
                        "steady_speedup_batched is CPU-simulator noise "
                        "prone (fewer while-trips vs per-trip dedup "
-                       "overhead; ~1.8x at n=16, ~1.0x at n=64 here).",
+                       "overhead; ~1.8x at n=16, ~1.0x at n=64 here). "
+                       "Schema v5 (DESIGN.md SS10): churn_events/"
+                       "churn_rate/recovered/lost_updates columns; the "
+                       "engine=batched_elastic cell injects a "
+                       "die-holding-lock crash and srsp completes via the "
+                       "lease-expiry recovery drain with lost_updates=0 "
+                       "among survivors; zero-churn cells are bitwise "
+                       "identical to the plain engines (tests/"
+                       "test_churn.py).",
         "backend": jax.default_backend(),
         "donate_buffers": harness.DONATE,
         "packed_metadata": P.PACKED,

@@ -154,14 +154,20 @@ def _steal_or_idle_turn(wl, state: SimState, wg, chunk_count, chunk_edges
     def do_steal(st):
         lock = victim * ws.qstride
         hot = harness.one_hot(ws.n_wgs, wg)
-        st, _ = O.acquire(proto, cfg, st, hot, lock, 0, 1, scope=O.REMOTE)
+        st, oldv = O.acquire(proto, cfg, st, hot, lock, 0, 1, scope=O.REMOTE)
+        # lock-sensitive: a steal that loses the CAS takes nothing and
+        # leaves the queue intact.  Healthy runs never lose it — turns are
+        # atomic, so every lock is free between turns — but a crashed
+        # owner's stuck lock (faults.crash_holding_lock) fences thieves
+        # out until the recovery drain force-releases it (DESIGN.md §10).
+        got = oldv[wg] == 0
         st, head = P.load(cfg, st, wg, lock + 1)
         st, tail = P.load(cfg, st, wg, lock + 2)
-        has = head < tail
+        has = got & (head < tail)
         slot = jnp.clip(head, 0, ws.qcap - 1)
         st, task = P.load(cfg, st, wg, lock + QMETA + slot)
         st, _ = P.store_word(cfg, st, wg, lock + 1, head + 1, guard=has)
-        st = O.release(proto, cfg, st, hot, lock, 0, scope=O.REMOTE)
+        st = O.release(proto, cfg, st, hot & got, lock, 0, scope=O.REMOTE)
         c = st.counters
         st = st._replace(counters=c._replace(
             steals=c.steals + has.astype(jnp.float32)))
@@ -171,7 +177,10 @@ def _steal_or_idle_turn(wl, state: SimState, wg, chunk_count, chunk_edges
         return st, jnp.int32(-1)
 
     store, chunk = lax.cond(can_steal, do_steal, do_idle, state.store)
-    qsize = state.qsize.at[victim].add(jnp.where(can_steal, -1, 0))
+    # bookkeeping shrinks only on an actual take (chunk >= 0): a lock-fenced
+    # steal must not hide the stuck chunks from future thieves
+    qsize = state.qsize.at[victim].add(jnp.where(can_steal & (chunk >= 0),
+                                                 -1, 0))
     qsize = jnp.maximum(qsize, 0)
 
     # ------- process the stolen chunk (thief pays, victim's queue shrinks) --
@@ -226,17 +235,21 @@ def _pop_batch_turn(wl, state: SimState, mask, chunk_count, chunk_edges
     locks = wgs * ws.qstride
 
     st = state.store
-    st, _ = O.acquire(proto, cfg, st, mask, locks, 0, 1, scope=O.LOCAL)
+    st, oldv = O.acquire(proto, cfg, st, mask, locks, 0, 1, scope=O.LOCAL)
+    # lock-sensitive pops (see _steal_or_idle_turn): a lane that loses its
+    # own-queue CAS — impossible healthy, real once a crash strands the
+    # lock at 1 — takes nothing and releases nothing
+    got = mask & (oldv == 0)
     st, tail = O.load(cfg, st, mask, locks + 2)
     st, head = O.load(cfg, st, mask, locks + 1)
-    has = mask & (head < tail)
+    has = got & (head < tail)
     slot = jnp.clip(tail - 1, 0, ws.qcap - 1)
     st, task = O.load(cfg, st, mask, locks + QMETA + slot)
     st, _ = O.store(cfg, st, has, locks + 2, tail - 1)
-    st = O.release(proto, cfg, st, mask, locks, 0, scope=O.LOCAL)
+    st = O.release(proto, cfg, st, got, locks, 0, scope=O.LOCAL)
     chunk = jnp.where(has, task - 1, -1)
 
-    qsize = jnp.maximum(state.qsize - mask.astype(jnp.int32), 0)
+    qsize = jnp.maximum(state.qsize - has.astype(jnp.int32), 0)
 
     # ------- process the chunks -------
     valid = (chunk >= 0) & (chunk < ws.n_chunks_max)

@@ -1,0 +1,195 @@
+"""Elastic alive-set scheduling + crash-recovery drains (ISSUE 6).
+
+Four contracts:
+
+1. **zero-churn identity** — an elastic engine with an empty churn
+   schedule is bitwise identical to the plain engine it wraps (the
+   fences reduce to `clock < BIG` and the fire branch never runs).
+   Complementary pins live in tests/test_workloads.py and
+   tests/test_engine_equivalence.py; here the elastic-vs-elastic and
+   churned cases are covered.
+2. **churned serial == batched** — churn events serialize against every
+   turn at clock >= their fire time in BOTH engines, so the batched
+   elastic engine stays bitwise equal to the serial one even mid-churn.
+3. **red/green crash recovery** — for every registered workload there is
+   a pinned crash injection (faults.crash_holding_lock /
+   faults.crash_dirty) where the self-check goes RED when the lease
+   never expires (faults.lease_never_expires: no recovery drain) and
+   GREEN when the recovery drain runs, with recoveries counted.
+4. **termination** — the wedged RED runs still terminate (the elastic
+   loop guard exits when no live agent can act or the round budget is
+   spent); a crash must never hang the suite.
+
+The pinned (at, evt) clocks below are tuned to the default CostParams:
+the crash must land while the victim is inside/holding work and the
+CRASH churn event must fire late enough that the victim provably takes
+the lock first, but early enough that the run is still in flight.  If
+cost parameters change, re-tune by sweeping `at` over the victim's
+active window and keeping `evt - at` of a few turn lengths (see the
+per-workload notes).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import workloads
+from repro.core import protocol as P
+from repro.workloads import faults, harness
+
+N_AGENTS = 4
+SEED = 3
+
+
+def _bench(name, proto=None, **kw):
+    return workloads.get(name).build("srsp", N_AGENTS, seed=SEED,
+                                     proto=proto, **kw)
+
+
+def _run_elastic(bench, engine, events=(), lease=0.0):
+    eb = harness.make_elastic(bench, events=events, lease=lease)
+    final = harness.runner(engine)(eb.wl, eb.state, *eb.ops)
+    return final, eb.check(final)
+
+
+def _assert_bitwise_equal(a, b, ctx):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=str(ctx))
+
+
+def _recoveries(final):
+    return float(np.sum(np.asarray(final.s.store.counters.recoveries)))
+
+
+# --------------------------------------------------------------------------
+# 1. zero-churn identity (elastic wrapper around every registered workload)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["producer_consumer", "kv_directory"])
+def test_zero_churn_bitwise_identical_both_engines(name):
+    for plain, elastic in (("serial", "serial_elastic"),
+                           ("batched", "batched_elastic")):
+        b = _bench(name)
+        ref = harness.runner(plain)(b.wl, b.state, *b.ops)
+        b2 = _bench(name)
+        fin, res = _run_elastic(b2, elastic)
+        _assert_bitwise_equal(ref, fin.s, (name, plain))
+        assert bool(np.all(np.asarray(fin.alive))), name
+        assert res["ok"], (name, res)
+    jax.clear_caches()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["reader_lock", "producer_consumer_mc"])
+def test_zero_churn_bitwise_identical_more_workloads(name):
+    b = _bench(name)
+    ref = harness.run_batched(b.wl, b.state, *b.ops)
+    b2 = _bench(name)
+    fin, res = _run_elastic(b2, "batched_elastic")
+    _assert_bitwise_equal(ref, fin.s, name)
+    assert res["ok"], (name, res)
+    jax.clear_caches()
+
+
+# --------------------------------------------------------------------------
+# 2. churned serial == batched
+# --------------------------------------------------------------------------
+
+def test_churned_serial_batched_bitwise_equivalent():
+    """Leave+join churn on kv_directory: both elastic engines must agree
+    bitwise on every leaf (store, alive mask, recovery clocks)."""
+    events = [(50.0, 2, "leave"), (150.0, 2, "join")]
+    ser, rs = _run_elastic(_bench("kv_directory"), "serial_elastic", events)
+    bat, rb = _run_elastic(_bench("kv_directory"), "batched_elastic", events)
+    _assert_bitwise_equal(ser, bat, "kv_directory leave+join")
+    assert rs["ok"] and rb["ok"], (rs, rb)
+    jax.clear_caches()
+
+
+def test_leave_then_join_recovers_and_readmits():
+    """A LEAVE reclaims immediately (lease 0) and the later JOIN
+    re-admits the agent with fresh work; survivors plus the returnee
+    all meet their (forgiven/extended) obligations."""
+    events = [(50.0, 2, "leave"), (150.0, 2, "join")]
+    fin, res = _run_elastic(_bench("kv_directory"), "batched_elastic", events)
+    assert res["ok"], res
+    assert bool(np.asarray(fin.alive)[2])        # back in the alive set
+    assert _recoveries(fin) >= 1.0               # the leave was drained
+    jax.clear_caches()
+
+
+# --------------------------------------------------------------------------
+# 3./4. red/green crash recovery per registered workload (+ termination)
+# --------------------------------------------------------------------------
+
+# Pinned crash scenarios (tuned to default CostParams — header note):
+#   worksteal: agent 0 owns 4 of 6 chunks (n_chunks_max=12); it crashes
+#     at clock 5 so its first pop's release never runs.  Once a thief's
+#     probe has PA-promoted the queue-0 lock, the stranded lock reaches
+#     L2 and every steal CAS fails — two chunks are unreachable until
+#     the recovery drain force-releases the victim's leased lock.
+#   reader_lock: the writer (agent 0) dies inside a publish at clock
+#     100; readers' remote acquires spin on the held lock.
+#   kv_directory: agent 2's releases after clock 60 publish the value
+#     without the LR insert (crash_dirty) — lookups read stale versions
+#     until the recovery drain writes its dirty words back.
+#   producer_consumer: producer 3 goes dirty at clock 12, early enough
+#     that no healthy release has LR-covered its block yet (a consumer
+#     drain inside the zombie window sees the stale count).
+PINS = [
+    ("worksteal", faults.crash_holding_lock, 0, 5.0, 400.0,
+     {"n_chunks_max": 12}),
+    ("reader_lock", faults.crash_holding_lock, 0, 100.0, 160.0, {}),
+    ("kv_directory", faults.crash_dirty, 2, 60.0, 120.0, {}),
+    ("producer_consumer", faults.crash_dirty, 3, 12.0, 30.0, {}),
+]
+
+
+@pytest.mark.parametrize("name,fault,victim,at,evt",
+                         [(n, f, v, a, e) for n, f, v, a, e, _ in PINS])
+def test_crash_without_recovery_is_red(name, fault, victim, at, evt):
+    """Crash + lease_never_expires: the run must TERMINATE (loop guard)
+    and the self-check must report the loss among survivors."""
+    kw = dict(PINS[[p[0] for p in PINS].index(name)][5])
+    proto = faults.lease_never_expires(
+        fault(P.get_protocol("srsp"), victim, at))
+    fin, res = _run_elastic(_bench(name, proto=proto, **kw),
+                            "batched_elastic",
+                            events=[(evt, victim, "crash")])
+    assert not res["ok"], (name, res)
+    assert res["check_fails"] > 0, (name, res)
+    assert not bool(np.asarray(fin.alive)[victim])   # victim retired
+    assert _recoveries(fin) == 0.0, name             # nothing was drained
+    jax.clear_caches()
+
+
+@pytest.mark.parametrize("name,fault,victim,at,evt",
+                         [(n, f, v, a, e) for n, f, v, a, e, _ in PINS])
+def test_crash_with_recovery_drain_is_green(name, fault, victim, at, evt):
+    """Same crash, lease expires at the churn event: the recovery drain
+    reclaims the dead agent's words and survivors finish clean."""
+    kw = dict(PINS[[p[0] for p in PINS].index(name)][5])
+    proto = fault(P.get_protocol("srsp"), victim, at)
+    fin, res = _run_elastic(_bench(name, proto=proto, **kw),
+                            "batched_elastic",
+                            events=[(evt, victim, "crash")])
+    assert res["ok"], (name, res)
+    assert _recoveries(fin) >= 1.0, name
+    assert not bool(np.asarray(fin.alive)[victim])
+    jax.clear_caches()
+
+
+@pytest.mark.slow
+def test_crash_recovery_serial_matches_batched():
+    """The worksteal crash pin, green variant, on both elastic engines —
+    crash recovery itself is engine-equivalent."""
+    name, fault, victim, at, evt, kw = PINS[0]
+    events = [(evt, victim, "crash")]
+    proto = fault(P.get_protocol("srsp"), victim, at)
+    ser, rs = _run_elastic(_bench(name, proto=proto, **kw),
+                           "serial_elastic", events)
+    bat, rb = _run_elastic(_bench(name, proto=proto, **kw),
+                           "batched_elastic", events)
+    _assert_bitwise_equal(ser, bat, "worksteal crash green")
+    assert rs["ok"] and rb["ok"], (rs, rb)
+    jax.clear_caches()

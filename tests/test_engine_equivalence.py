@@ -61,6 +61,28 @@ def test_engines_equivalent_sssp_and_mis():
 
 
 # --------------------------------------------------------------------------
+# zero-churn elastic pin (ISSUE 6): the alive-set machinery with an empty
+# churn schedule must be bitwise invisible on the paper's main workload
+# --------------------------------------------------------------------------
+
+def test_zero_churn_elastic_pin_worksteal():
+    from repro import workloads
+    from repro.workloads import harness
+    for plain, elastic in (("serial", "serial_elastic"),
+                           ("batched", "batched_elastic")):
+        b = workloads.get("worksteal").build("srsp", 4, seed=3)
+        ref = harness.runner(plain)(b.wl, b.state, *b.ops)
+        b2 = workloads.get("worksteal").build("srsp", 4, seed=3)
+        eb = harness.make_elastic(b2)
+        fin = harness.runner(elastic)(eb.wl, eb.state, *eb.ops)
+        for la, lb in zip(jax.tree.leaves(ref), jax.tree.leaves(fin.s)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=plain)
+        assert bool(np.asarray(fin.alive).all())
+    jax.clear_caches()
+
+
+# --------------------------------------------------------------------------
 # dirty ⊆ sFIFO invariant through the block-major batched ops
 # --------------------------------------------------------------------------
 

@@ -129,6 +129,9 @@ def test_mixed_scope_vector_dispatch():
                                      _fill(1))
     rem = jnp.asarray([False, False, True, False])
     sb, old_r = proto.acquire_rem_b(CFG, sb, rem, addrs, _fill(0), _fill(1))
+    # ops.acquire = scope dispatch + clock-stamped lease bookkeeping
+    # (DESIGN.md §10); apply the same stamp to the manual reference
+    sb = P.lease_stamp(sb, active, addrs)
     _assert_stores_equal(sa, sb, "mixed-scope")
     want = jnp.where(rem, old_r, jnp.where(glob, old_g, old_l))
     np.testing.assert_array_equal(np.asarray(old_a), np.asarray(want))
@@ -239,7 +242,8 @@ def test_unknown_names_raise_with_registered_list():
     with pytest.raises(ValueError, match="registered.*srsp"):
         worksteal.WorkStealSim(worksteal.WSConfig(n_wgs=2), "nope")
     assert "srsp" in P.protocols()
-    assert set(harness.engines()) == {"serial", "batched"}
+    assert set(harness.engines()) == {
+        "serial", "batched", "serial_elastic", "batched_elastic"}
     assert "baseline" in harness.scenarios()
 
 

@@ -66,6 +66,21 @@ def test_serial_batched_equivalent_other_scenarios(name, scenario):
 
 
 @pytest.mark.parametrize("name", NEW_WORKLOADS)
+def test_zero_churn_elastic_pin(name):
+    """ISSUE 6 acceptance: wrapping a bench in the elastic alive-set
+    machinery with an EMPTY churn schedule must be bitwise invisible —
+    same final state as the plain batched engine, every leaf."""
+    b = workloads.get(name).build("srsp", N_AGENTS, seed=SEED)
+    ref = harness.run_batched(b.wl, b.state, *b.ops)
+    b2 = workloads.get(name).build("srsp", N_AGENTS, seed=SEED)
+    eb = harness.make_elastic(b2)
+    fin = harness.run_batched_elastic(eb.wl, eb.state, *eb.ops)
+    _assert_bitwise_equal(ref, fin.s, (name, "zero-churn"))
+    assert bool(np.all(np.asarray(fin.alive))), name
+    jax.clear_caches()
+
+
+@pytest.mark.parametrize("name", NEW_WORKLOADS)
 def test_weakened_protocol_is_caught(name):
     """Remote acquire without promotion (faults.no_promotion) leaves the
     owners' released writes stranded in their L1s; every workload's
