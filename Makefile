@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all bench bench-full sweep sweep-smoke
+.PHONY: test test-slow test-all bench bench-full sweep sweep-smoke \
+	trace bench-compare
 
 # Tier-1: fast suite (slow-marked full-size sims excluded via pyproject addopts)
 test:
@@ -32,25 +33,32 @@ sweep:
 	$(PYTHON) -m repro.workloads.sweep --out BENCH_workloads.json
 
 # CI smoke: 1 replica, n_agents=16 grid, no subprocess A/Bs — catches
-# sweep-schema regressions in PR instead of at bench time.  The output is
-# a scratch file; the committed BENCH_workloads.json comes from `make sweep`.
+# sweep-schema regressions in PR instead of at bench time.  Runs under
+# REPRO_TRACE=1 so the schema-v6 latency columns and the Perfetto export
+# are exercised too; benchmarks/check_smoke.py carries the structural
+# assertions.  The committed BENCH_workloads.json comes from `make sweep`.
 sweep-smoke:
-	$(PYTHON) -m repro.workloads.sweep --sizes 16 --seeds 1 --iters 1 \
-	  --no-donation --no-pack-ab --remote-batch-sizes 16 \
-	  --out BENCH_workloads.smoke.json
-	$(PYTHON) -c "import json; d=json.load(open('BENCH_workloads.smoke.json')); \
-	  assert d['schema_version'] == 5 and d['runs'], d.get('schema_version'); \
-	  bad=[r for r in d['runs'] if not r['check_ok'] \
-	       and r['scenario'] != 'scope_only']; \
-	  assert not bad, bad; \
-	  assert all(r['api'] == 'scoped' for r in d['runs']); \
-	  rb=[r for r in d['runs'] if r['remote_batch']]; \
-	  assert rb, 'no remote-batch-capable cell in the grid'; \
-	  ab=d['remote_batch_ab']; \
-	  assert ab and all(r['check_ok'] for r in ab), ab; \
-	  ch=[r for r in d['runs'] if r['churn_events']]; \
-	  assert ch, 'no churned crash-recovery cell'; \
-	  assert all(r['check_ok'] and r['recovered'] > 0 \
-	             and r['lost_updates'] == 0 for r in ch), ch; \
-	  print('sweep smoke OK:', len(d['runs']), 'cells,', \
-	        len(rb), 'remote-batch cells,', len(ch), 'churned')"
+	env REPRO_TRACE=1 $(PYTHON) -m repro.workloads.sweep --sizes 16 \
+	  --seeds 1 --iters 1 --no-donation --no-pack-ab \
+	  --remote-batch-sizes 16 --out BENCH_workloads.smoke.json \
+	  --trace-out TRACE_sweep.json
+	$(PYTHON) benchmarks/check_smoke.py BENCH_workloads.smoke.json \
+	  --expect-trace
+
+# Trace the pinned crash-recovery demo cell and export Perfetto JSON
+# (load TRACE_demo.json at https://ui.perfetto.dev); see README
+# "Observability".
+trace:
+	$(PYTHON) -m repro.obs.report --demo --out TRACE_demo.json
+
+# Bench regression gate: fresh smoke sweep vs the committed smoke
+# baseline (BENCH_workloads.smoke.json).  Exits nonzero on regressed
+# makespan / latency_p99 / srsp-vs-baseline ratios; CI runs the same
+# diff with --advisory.
+bench-compare:
+	env REPRO_TRACE=1 $(PYTHON) -m repro.workloads.sweep --sizes 16 \
+	  --seeds 1 --iters 1 --no-donation --no-pack-ab \
+	  --remote-batch-sizes 16 --out BENCH_workloads.smoke.new.json \
+	  --trace-out TRACE_sweep.new.json
+	$(PYTHON) benchmarks/compare.py BENCH_workloads.smoke.json \
+	  BENCH_workloads.smoke.new.json

@@ -1,0 +1,123 @@
+"""Structural assertions for a sweep smoke run (CI's sweep-smoke step).
+
+    python benchmarks/check_smoke.py BENCH_workloads.smoke.json [--expect-trace]
+
+Carries everything the old Makefile inline one-liner checked (schema
+version, check_ok across the grid, scoped API, remote-batch A/B, the
+churned crash-recovery cell) plus the schema-v6 observability columns:
+latency percentile keys present on every run row, and — with
+--expect-trace, used when the smoke ran under REPRO_TRACE=1 — at least
+one traced cell with events, plus a loadable Chrome-trace JSON at the
+path the sweep doc names.  Exits nonzero with the offending rows on any
+failure so the CI log shows *what* broke, not just that it broke.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+LATENCY_KEYS = ("latency_p50", "latency_p95", "latency_p99",
+                "latency_turns", "trace_events", "trace_dropped")
+
+
+def check(doc: dict, *, expect_trace: bool, doc_dir: str = ".") -> list:
+    """-> list of failure strings (empty = OK)."""
+    fails = []
+    if doc.get("schema_version") != 6:
+        fails.append(f"schema_version {doc.get('schema_version')} != 6")
+    runs = doc.get("runs", [])
+    if not runs:
+        fails.append("no runs")
+
+    bad = [r for r in runs if not r.get("check_ok")
+           and r.get("scenario") != "scope_only"]
+    if bad:
+        fails.append(f"check_ok failures: {bad}")
+    if not all(r.get("api") == "scoped" for r in runs):
+        fails.append("non-scoped api rows present")
+
+    rb = [r for r in runs if r.get("remote_batch")]
+    if not rb:
+        fails.append("no remote-batch-capable cell in the grid")
+    ab = doc.get("remote_batch_ab")
+    if not ab or not all(r.get("check_ok") for r in ab):
+        fails.append(f"remote_batch_ab missing or failed: {ab}")
+
+    ch = [r for r in runs if r.get("churn_events")]
+    if not ch:
+        fails.append("no churned crash-recovery cell")
+    elif not all(r.get("check_ok") and r.get("recovered", 0) > 0
+                 and r.get("lost_updates") == 0 for r in ch):
+        fails.append(f"churned cell failed: {ch}")
+
+    # v6: every row carries the latency/trace columns (None/0 when the
+    # tracer is off — presence is the schema contract, values are not)
+    missing = [r for r in runs if any(k not in r for k in LATENCY_KEYS)]
+    if missing:
+        fails.append(f"rows missing v6 latency columns: {missing[:3]}")
+
+    tr = doc.get("trace")
+    if not isinstance(tr, dict) or "enabled" not in tr:
+        fails.append(f"missing v6 top-level trace doc: {tr}")
+    if "stragglers" not in doc:
+        fails.append("missing v6 top-level stragglers list")
+
+    if expect_trace:
+        if not (tr and tr.get("enabled")):
+            fails.append("--expect-trace but doc says tracing was off "
+                         "(run the sweep under REPRO_TRACE=1)")
+        traced = [r for r in runs if r.get("trace_events")]
+        if not traced:
+            fails.append("--expect-trace but no run row has trace_events > 0")
+        else:
+            with_lat = [r for r in traced if r.get("latency_p99") is not None
+                        and r.get("latency_turns", 0) > 0]
+            if not with_lat:
+                fails.append(f"traced rows lack latency percentiles: "
+                             f"{traced[:3]}")
+        tf = tr.get("file") if tr else None
+        if not tf:
+            fails.append("--expect-trace but doc names no trace file")
+        else:
+            path = tf if os.path.isabs(tf) else os.path.join(doc_dir, tf)
+            try:
+                with open(path) as f:
+                    tdoc = json.load(f)
+                evs = tdoc.get("traceEvents")
+                if not evs or not any(e.get("ph") == "X" for e in evs):
+                    fails.append(f"{tf}: no duration events in traceEvents")
+            except (OSError, ValueError) as e:
+                fails.append(f"trace file {tf} unreadable: {e}")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("doc", help="BENCH_workloads.smoke.json from the sweep")
+    ap.add_argument("--expect-trace", action="store_true",
+                    help="require a traced cell + loadable Perfetto JSON "
+                         "(smoke ran under REPRO_TRACE=1)")
+    args = ap.parse_args(argv)
+
+    with open(args.doc) as f:
+        doc = json.load(f)
+    fails = check(doc, expect_trace=args.expect_trace,
+                  doc_dir=os.path.dirname(os.path.abspath(args.doc)))
+    for msg in fails:
+        print(f"  FAIL: {msg}")
+    if fails:
+        print(f"sweep smoke FAILED: {len(fails)} checks")
+        return 1
+    runs = doc["runs"]
+    rb = [r for r in runs if r.get("remote_batch")]
+    ch = [r for r in runs if r.get("churn_events")]
+    traced = [r for r in runs if r.get("trace_events")]
+    print(f"sweep smoke OK: {len(runs)} cells, {len(rb)} remote-batch, "
+          f"{len(ch)} churned, {len(traced)} traced")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

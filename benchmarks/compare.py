@@ -1,0 +1,144 @@
+"""Bench regression gate: diff two BENCH_workloads.json files.
+
+    python benchmarks/compare.py BASE.json NEW.json [--makespan-tol 0.02]
+        [--p99-tol 0.10] [--ratio-tol 0.05] [--advisory]
+
+Matches runs by (workload, scenario, n_agents, engine) and flags:
+
+  * modeled-makespan growth beyond --makespan-tol (the protocol metric
+    is deterministic per seed/config, so the default tolerance is
+    tight — any real growth is a schedule change, not noise);
+  * latency_p99 growth beyond --p99-tol when both files carry the
+    schema-v6 latency columns (upper-edge buckets are quantized in
+    powers of two, so the tolerance mostly absorbs one-bucket moves);
+  * a check_ok that flipped true -> false (always a regression);
+  * srsp_vs_* comparison ratios that dropped by more than --ratio-tol
+    (srsp losing ground against rsp/baseline), and churn cells that
+    stopped completing or started losing updates.
+
+Wall-clock columns are deliberately NOT gated — they measure the host,
+not the protocol.  Exit status: 0 clean, 1 regressions (unless
+--advisory, which reports but exits 0 — the CI perf-diff job).  Cells
+missing from NEW (or new cells without a baseline) are notes, not
+failures, so grid growth doesn't break the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+KEY = ("workload", "scenario", "n_agents", "engine")
+
+
+def run_key(r) -> tuple:
+    return tuple(r.get(k) for k in KEY)
+
+
+def _fmt_key(k) -> str:
+    return f"{k[0]}/{k[1]}/n={k[2]}/{k[3]}"
+
+
+def compare_docs(base: dict, new: dict, *, makespan_tol: float,
+                 p99_tol: float, ratio_tol: float) -> tuple:
+    """-> (regressions, improvements, notes) — lists of strings."""
+    regressions, improvements, notes = [], [], []
+    bruns = {run_key(r): r for r in base.get("runs", [])}
+    nruns = {run_key(r): r for r in new.get("runs", [])}
+
+    for k in sorted(nruns.keys() - bruns.keys(), key=str):
+        notes.append(f"new cell (no baseline): {_fmt_key(k)}")
+    for k in sorted(bruns.keys() - nruns.keys(), key=str):
+        notes.append(f"cell missing from new bench: {_fmt_key(k)}")
+
+    for k in sorted(bruns.keys() & nruns.keys(), key=str):
+        br, nr = bruns[k], nruns[k]
+        name = _fmt_key(k)
+        if br.get("check_ok") and not nr.get("check_ok"):
+            regressions.append(f"{name}: check_ok true -> false")
+        if br.get("makespan") and nr.get("makespan") is not None:
+            ratio = nr["makespan"] / br["makespan"]
+            if ratio > 1 + makespan_tol:
+                regressions.append(
+                    f"{name}: makespan {br['makespan']:.0f} -> "
+                    f"{nr['makespan']:.0f} (+{(ratio - 1) * 100:.1f}%)")
+            elif ratio < 1 - makespan_tol:
+                improvements.append(
+                    f"{name}: makespan {br['makespan']:.0f} -> "
+                    f"{nr['makespan']:.0f} ({(ratio - 1) * 100:.1f}%)")
+        bp, np_ = br.get("latency_p99"), nr.get("latency_p99")
+        if bp and np_ is not None:
+            ratio = np_ / bp
+            if ratio > 1 + p99_tol:
+                regressions.append(
+                    f"{name}: latency_p99 {bp:g} -> {np_:g} "
+                    f"(+{(ratio - 1) * 100:.1f}%)")
+            elif ratio < 1 - p99_tol:
+                improvements.append(
+                    f"{name}: latency_p99 {bp:g} -> {np_:g}")
+
+    bcmp = base.get("comparisons", {})
+    ncmp = new.get("comparisons", {})
+    for cname in sorted(bcmp.keys() & ncmp.keys()):
+        bc, nc = bcmp[cname], ncmp[cname]
+        for field, bv in sorted(bc.items()):
+            nv = nc.get(field)
+            if nv is None:
+                continue
+            if field.startswith("srsp_vs_") and isinstance(bv, (int, float)):
+                if nv < bv * (1 - ratio_tol):
+                    regressions.append(
+                        f"comparisons[{cname}].{field}: {bv} -> {nv} "
+                        f"(srsp lost ground)")
+                elif nv > bv * (1 + ratio_tol):
+                    improvements.append(
+                        f"comparisons[{cname}].{field}: {bv} -> {nv}")
+            elif field == "completes_under_crash" and bv and not nv:
+                regressions.append(
+                    f"comparisons[{cname}]: stopped completing under crash")
+            elif field == "lost_updates" and not bv and nv:
+                regressions.append(
+                    f"comparisons[{cname}]: lost_updates {bv} -> {nv}")
+    return regressions, improvements, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("base", help="baseline BENCH_workloads.json")
+    ap.add_argument("new", help="candidate BENCH_workloads.json")
+    ap.add_argument("--makespan-tol", type=float, default=0.02)
+    ap.add_argument("--p99-tol", type=float, default=0.10)
+    ap.add_argument("--ratio-tol", type=float, default=0.05)
+    ap.add_argument("--advisory", action="store_true",
+                    help="report regressions but exit 0 (CI perf diff)")
+    args = ap.parse_args(argv)
+
+    with open(args.base) as f:
+        base = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    if base.get("schema_version") != new.get("schema_version"):
+        print(f"note: schema_version {base.get('schema_version')} -> "
+              f"{new.get('schema_version')} (columns may be partial)")
+
+    regressions, improvements, notes = compare_docs(
+        base, new, makespan_tol=args.makespan_tol, p99_tol=args.p99_tol,
+        ratio_tol=args.ratio_tol)
+    for n in notes:
+        print(f"  note: {n}")
+    for i in improvements:
+        print(f"  improvement: {i}")
+    for r in regressions:
+        print(f"  REGRESSION: {r}")
+    n_cells = len(new.get("runs", []))
+    verdict = "REGRESSED" if regressions else "clean"
+    print(f"bench compare: {verdict} — {len(regressions)} regressions, "
+          f"{len(improvements)} improvements over {n_cells} cells"
+          + (" [advisory]" if args.advisory and regressions else ""))
+    return 1 if regressions and not args.advisory else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

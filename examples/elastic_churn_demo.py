@@ -18,28 +18,40 @@ Then a leave→join round on kv_directory: a LEAVE retires an agent (its
 obligations are forgiven, its state reclaimed immediately), a later
 JOIN re-admits it with fresh work.
 
-  PYTHONPATH=src python examples/elastic_churn_demo.py
+  PYTHONPATH=src python examples/elastic_churn_demo.py [--trace]
+
+With --trace each run also records the in-engine event ring
+(DESIGN.md §11) and the crash+recovery run is exported to
+TRACE_churn_demo.json — load it at https://ui.perfetto.dev to see the
+crash instant, the recovery drain, and the thieves' steal traffic on
+per-agent tracks (`python -m repro.obs.report --demo` is the
+one-command equivalent).
 """
+import sys
+
 import numpy as np
 
 from repro import workloads
 from repro.core import protocol as P
+from repro.obs import export, trace as T
 from repro.workloads import faults, harness
 
 # the pinned crash geometry from tests/test_churn.py
 VICTIM, AT, EVT = 0, 5.0, 400.0
 
 
-def run(name, proto=None, events=(), engine="batched_elastic", **kw):
+def run(name, proto=None, events=(), engine="batched_elastic", trace=False,
+        **kw):
     b = workloads.get(name).build("srsp", 4, seed=3, proto=proto, **kw)
     eb = harness.make_elastic(b, events=events)
-    fin = harness.runner(engine)(eb.wl, eb.state, *eb.ops)
+    state = T.with_trace(eb.state) if trace else eb.state
+    fin = harness.runner(engine)(eb.wl, state, *eb.ops)
     res = eb.check(fin)
     rec = float(np.sum(np.asarray(fin.s.store.counters.recoveries)))
     return fin, res, rec
 
 
-def main():
+def main(trace=False):
     srsp = P.get_protocol("srsp")
     crash = [(EVT, VICTIM, "crash")]
 
@@ -50,11 +62,16 @@ def main():
 
     fin, res, rec = run(
         "worksteal", proto=faults.crash_holding_lock(srsp, VICTIM, AT),
-        events=crash, n_chunks_max=12)
+        events=crash, n_chunks_max=12, trace=trace)
     print(f"crash + recovery:  check={'ok' if res['ok'] else 'FAIL':4s} "
           f"alive={np.asarray(fin.alive).tolist()} recovered={rec:.0f} "
           f"(agent {VICTIM} died holding its queue lock at clock {AT:.0f}; "
           f"lease expired at the churn event, drain reclaimed its chunks)")
+    if trace:
+        doc = export.write_trace("TRACE_churn_demo.json", fin.s.store,
+                                 label="worksteal crash+recovery demo")
+        print(f"   traced {doc['srsp']['events']} events -> "
+              f"TRACE_churn_demo.json (open in https://ui.perfetto.dev)")
 
     fin, res, rec = run(
         "worksteal",
@@ -75,4 +92,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(trace="--trace" in sys.argv[1:])

@@ -94,3 +94,13 @@ def bump(c: Counters, **kw) -> Counters:
 
 def makespan(c: Counters) -> jnp.ndarray:
     return jnp.max(c.cycles)
+
+
+def charged_since(c: Counters, clock0) -> jnp.ndarray:
+    """Per-cache cycles charged since a captured clock vector — the
+    attribution primitive the event tracer and the per-turn latency
+    histograms use (DESIGN.md §11).  Charges land on the lane they
+    were billed to, so a lane's delta across an op includes NACK/flush
+    time OTHER lanes' ops billed it in the same call — by design: the
+    trace answers "where did this agent's cycles go", not "who issued"."""
+    return c.cycles - jnp.asarray(clock0, jnp.float32)

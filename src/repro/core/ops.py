@@ -32,10 +32,13 @@ visible remotely.  That asymmetry is the paper's point.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import protocol as P
+from repro.core import tables
+from repro.obs import trace as T
 
 # Scope codes of the ISA.  LOCAL is wg ("local") scope, and both REMOTE
 # and GLOBAL are realizations of cmp ("global") scope visibility
@@ -60,6 +63,38 @@ def _check_static(scope: int) -> None:
 
 def _bcast(x, n: int) -> jnp.ndarray:
     return jnp.broadcast_to(jnp.asarray(x, jnp.int32), (n,))
+
+
+def _scope_label(scope) -> str:
+    # unknown static ints still reach _check_static's ValueError below
+    return SCOPE_NAMES.get(scope, "invalid") if isinstance(scope, int) \
+        else "mixed"
+
+
+def _acquire_outcome(cfg, st: P.Store, addrs, scope):
+    """Pre-dispatch trace outcome per lane (only traced when tracing is
+    on): LOCAL lanes promote iff their PA-TBL holds the address, REMOTE
+    lanes probe iff any OTHER cache's LR-TBL records it (else the probe
+    round all-NACKs), GLOBAL lanes always pay the full invalidate."""
+    n = cfg.n_caches
+    promote = jax.vmap(tables.pa_contains)(st.pa, addrs)
+    ptrs = jax.vmap(lambda t: jax.vmap(
+        lambda a: tables.lr_lookup(t, a))(addrs))(st.lr)   # [cache, lane]
+    others = jnp.arange(n)[:, None] != jnp.arange(n)[None, :]
+    sharer = jnp.any((ptrs >= 0) & others, axis=0)
+    scope_arr = jnp.broadcast_to(jnp.asarray(scope, jnp.int32), (n,))
+    loc = jnp.where(promote, T.OC_PROMOTE, T.OC_HIT)
+    rem = jnp.where(sharer, T.OC_PROBE, T.OC_NACK)
+    return jnp.where(scope_arr == LOCAL, loc,
+                     jnp.where(scope_arr == REMOTE, rem, T.OC_GLOBAL))
+
+
+def _release_outcome(cfg, scope):
+    scope_arr = jnp.broadcast_to(jnp.asarray(scope, jnp.int32),
+                                 (cfg.n_caches,))
+    return jnp.where(scope_arr == LOCAL, T.OC_HIT,
+                     jnp.where(scope_arr == REMOTE, T.OC_PROBE,
+                               T.OC_GLOBAL))
 
 
 def _gate_crashed(proto: P.Protocol, st: P.Store, active):
@@ -126,30 +161,42 @@ def acquire(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
     must be address-disjoint — the harness's obligation)."""
     addrs, expect, new = (_bcast(a, cfg.n_caches)
                           for a in (addrs, expect, new))
-    if isinstance(scope, int):
-        _check_static(scope)
-        if scope == LOCAL:
-            st, old = proto.acquire_loc_b(cfg, st, active, addrs, expect,
-                                          new)
-        elif scope == GLOBAL:
-            st, old = proto.acquire_glob_b(cfg, st, active, addrs, expect,
-                                           new)
+    traced = T.enabled(st.trace)
+    if traced:
+        clock0 = st.counters.cycles
+        outcome = _acquire_outcome(cfg, st, addrs, scope)
+    with jax.named_scope(f"ops.acquire.{_scope_label(scope)}"):
+        if isinstance(scope, int):
+            _check_static(scope)
+            if scope == LOCAL:
+                st, old = proto.acquire_loc_b(cfg, st, active, addrs,
+                                              expect, new)
+            elif scope == GLOBAL:
+                st, old = proto.acquire_glob_b(cfg, st, active, addrs,
+                                               expect, new)
+            else:
+                st, old = _acquire_rem(proto, cfg, st, active, addrs,
+                                       expect, new)
         else:
-            st, old = _acquire_rem(proto, cfg, st, active, addrs, expect,
-                                   new)
-        # clock-stamped lease bookkeeping (crash recovery, DESIGN.md §10):
-        # pure metadata, charges nothing — zero-churn schedules unchanged
-        return P.lease_stamp(st, active, addrs), old
-    scope = jnp.asarray(scope, jnp.int32)
-    active = jnp.asarray(active, bool)
-    loc = active & (scope == LOCAL)
-    rem = active & (scope == REMOTE)
-    glob = active & (scope == GLOBAL)
-    st, old_l = proto.acquire_loc_b(cfg, st, loc, addrs, expect, new)
-    st, old_g = proto.acquire_glob_b(cfg, st, glob, addrs, expect, new)
-    st, old_r = _acquire_rem(proto, cfg, st, rem, addrs, expect, new)
-    old = jnp.where(rem, old_r, jnp.where(glob, old_g, old_l))
-    return P.lease_stamp(st, active, addrs), old
+            scope_a = jnp.asarray(scope, jnp.int32)
+            active = jnp.asarray(active, bool)
+            loc = active & (scope_a == LOCAL)
+            rem = active & (scope_a == REMOTE)
+            glob = active & (scope_a == GLOBAL)
+            st, old_l = proto.acquire_loc_b(cfg, st, loc, addrs, expect,
+                                            new)
+            st, old_g = proto.acquire_glob_b(cfg, st, glob, addrs, expect,
+                                             new)
+            st, old_r = _acquire_rem(proto, cfg, st, rem, addrs, expect,
+                                     new)
+            old = jnp.where(rem, old_r, jnp.where(glob, old_g, old_l))
+    # clock-stamped lease bookkeeping (crash recovery, DESIGN.md §10):
+    # pure metadata, charges nothing — zero-churn schedules unchanged
+    st = P.lease_stamp(st, active, addrs)
+    if traced:
+        st = T.record_op(st, active, T.ACQUIRE, scope, addrs, clock0,
+                         outcome)
+    return st, old
 
 
 def release(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
@@ -158,24 +205,39 @@ def release(proto: P.Protocol, cfg: P.ProtoConfig, st: P.Store, active,
     `addrs[i]` with release semantics at `scope[i]`.  Returns store'."""
     addrs, vals = (_bcast(a, cfg.n_caches) for a in (addrs, vals))
     active = _gate_crashed(proto, st, active)
-    if isinstance(scope, int):
-        _check_static(scope)
-        if scope == LOCAL:
-            st = proto.release_loc_b(cfg, st, active, addrs, vals)
-        elif scope == GLOBAL:
-            st = proto.release_glob_b(cfg, st, active, addrs, vals)
+    traced = T.enabled(st.trace)
+    if traced:
+        clock0 = st.counters.cycles
+    with jax.named_scope(f"ops.release.{_scope_label(scope)}"):
+        if isinstance(scope, int):
+            _check_static(scope)
+            if scope == LOCAL:
+                st = proto.release_loc_b(cfg, st, active, addrs, vals)
+            elif scope == GLOBAL:
+                st = proto.release_glob_b(cfg, st, active, addrs, vals)
+            else:
+                st = _release_rem(proto, cfg, st, active, addrs, vals)
         else:
-            st = _release_rem(proto, cfg, st, active, addrs, vals)
-        # lease bookkeeping mirror of `acquire` (pure metadata)
-        return P.lease_clear(st, active)
-    scope = jnp.asarray(scope, jnp.int32)
-    active = jnp.asarray(active, bool)
-    st = proto.release_loc_b(cfg, st, active & (scope == LOCAL), addrs, vals)
-    st = proto.release_glob_b(cfg, st, active & (scope == GLOBAL), addrs,
-                              vals)
-    st = _release_rem(proto, cfg, st, active & (scope == REMOTE), addrs,
-                      vals)
-    return P.lease_clear(st, active)
+            scope_a = jnp.asarray(scope, jnp.int32)
+            active = jnp.asarray(active, bool)
+            st = proto.release_loc_b(cfg, st, active & (scope_a == LOCAL),
+                                     addrs, vals)
+            st = proto.release_glob_b(cfg, st, active & (scope_a == GLOBAL),
+                                      addrs, vals)
+            st = _release_rem(proto, cfg, st, active & (scope_a == REMOTE),
+                              addrs, vals)
+    # lease bookkeeping mirror of `acquire` (pure metadata)
+    st = P.lease_clear(st, active)
+    if traced:
+        st = T.record_op(st, active, T.RELEASE, scope, addrs, clock0,
+                         _release_outcome(cfg, scope))
+    return st
+
+
+def _l1_state(cfg, st, addrs, plane):
+    """Pre-op L1 metadata bit per lane at `addrs` (trace classification)."""
+    b, o = P._split(cfg, _bcast(addrs, cfg.n_caches))
+    return P._pl_get(plane, jnp.arange(cfg.n_caches), b, o)
 
 
 def load(cfg: P.ProtoConfig, st: P.Store, active, addrs, scope=LOCAL):
@@ -183,7 +245,15 @@ def load(cfg: P.ProtoConfig, st: P.Store, active, addrs, scope=LOCAL):
     always routes through the issuing agent's L1 — module docstring)."""
     if isinstance(scope, int):
         _check_static(scope)
-    return P.b_load(cfg, st, active, addrs)
+    traced = T.enabled(st.trace)
+    if traced:
+        clock0 = st.counters.cycles
+        hit = _l1_state(cfg, st, addrs, st.wvalid)
+    st, val = P.b_load(cfg, st, active, addrs)
+    if traced:
+        st = T.record_op(st, active, T.LOAD, scope, addrs, clock0,
+                         jnp.where(hit, T.OC_HIT, T.OC_MISS))
+    return st, val
 
 
 def store(cfg: P.ProtoConfig, st: P.Store, active, addrs, vals,
@@ -191,4 +261,13 @@ def store(cfg: P.ProtoConfig, st: P.Store, active, addrs, vals,
     """Ordinary scoped write, one per active agent (scope-invariant)."""
     if isinstance(scope, int):
         _check_static(scope)
-    return P.b_store_word(cfg, st, active, addrs, vals, force_tail)
+    traced = T.enabled(st.trace)
+    if traced:
+        clock0 = st.counters.cycles
+        # write-combining: a "hit" merges into an already-dirty word
+        combined = _l1_state(cfg, st, addrs, st.wdirty)
+    st, pos = P.b_store_word(cfg, st, active, addrs, vals, force_tail)
+    if traced:
+        st = T.record_op(st, active, T.STORE, scope, addrs, clock0,
+                         jnp.where(combined, T.OC_HIT, T.OC_MISS))
+    return st, pos

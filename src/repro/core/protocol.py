@@ -73,6 +73,7 @@ from jax import lax
 from repro.core import bitmask, sfifo, tables
 from repro.core.costmodel import CostParams, Counters, make_counters
 from repro.kernels.selective_flush.ops import drain_writeback
+from repro.obs import trace as obs
 
 INVALID = jnp.int32(-1)
 # Public drain-everything sentinel for the `pos` argument of the drain ops
@@ -152,6 +153,7 @@ class Store(NamedTuple):
     pa: tables.PATbl
     lease: Lease           # clock-stamped sync-word leases (crash recovery)
     counters: Counters
+    trace: obs.TraceLog    # event ring + latency hists; empty unless traced
 
 
 def make_store(cfg: ProtoConfig) -> Store:
@@ -169,6 +171,7 @@ def make_store(cfg: ProtoConfig) -> Store:
         pa=stack(tables.pa_make(cfg.pa_tbl)),
         lease=lease_make(n),
         counters=make_counters(n),
+        trace=obs.make(obs.default_cap(), n),
     )
 
 
@@ -383,8 +386,9 @@ def b_recover(cfg: ProtoConfig, st: Store, mask) -> Store:
     adds, but the elastic schedulers additionally guard the call under a
     `lax.cond` so zero-churn runs never execute it at all."""
     mask = jnp.asarray(mask, bool)
-    st = b_invalidate(cfg, st, mask)
+    clock0 = st.counters.cycles
     la = st.lease.addr
+    st = b_invalidate(cfg, st, mask)
     rel = mask & (la >= 0)
     st, _ = b_atomic_l2(cfg, st, rel, jnp.clip(la, 0),
                         _fill(cfg, 0), _fill(cfg, 0), False)
@@ -392,7 +396,12 @@ def b_recover(cfg: ProtoConfig, st: Store, mask) -> Store:
     c = st.counters
     c = c._replace(recoveries=c.recoveries
                    + jnp.sum(mask.astype(jnp.float32)))
-    return st._replace(counters=c)
+    st = st._replace(counters=c)
+    # observability: one RECOVER event per reclaimed cache, stamped with
+    # the leased address the drain force-released (identity when off)
+    return obs.record_event(st, mask, obs.RECOVER, obs.OC_RECOVER,
+                            addr=la, clock=clock0,
+                            cycles=st.counters.cycles - clock0)
 
 
 # --------------------------------------------------------------------------

@@ -53,9 +53,12 @@ def drain_writeback(l2: jnp.ndarray, rows: jnp.ndarray, dirty: jnp.ndarray,
     the kernel equivalence tests."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    if not use_pallas:
-        return ref.drain_writeback_ref(l2, rows, dirty, indices)
-    if interpret is None:
-        interpret = default_interpret()
-    return drain_writeback_pallas(l2, rows, dirty, indices,
-                                  interpret=interpret)
+    # profiler annotation: the drain scatter is the megakernel-fusion
+    # candidate (ROADMAP) — make it findable in jax.profiler traces
+    with jax.named_scope("kernels.drain_writeback"):
+        if not use_pallas:
+            return ref.drain_writeback_ref(l2, rows, dirty, indices)
+        if interpret is None:
+            interpret = default_interpret()
+        return drain_writeback_pallas(l2, rows, dirty, indices,
+                                      interpret=interpret)

@@ -1,0 +1,11 @@
+"""Observability subsystem (DESIGN.md §11): in-engine event tracing,
+log-bucketed latency histograms, and host-side trace export.
+
+* `obs.trace`   — the `TraceLog` ring-buffer pytree carried inside the
+  protocol `Store` and appended at the scoped-ISA dispatch choke point;
+  a static identity when disabled (the default).
+* `obs.metrics` — log2 bucket math and bracketing percentiles.
+* `obs.export`  — decode a ring buffer into Chrome-trace/Perfetto JSON
+  and a text report.
+* `obs.report`  — `python -m repro.obs.report` CLI (plus `--demo`).
+"""

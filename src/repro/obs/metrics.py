@@ -1,0 +1,88 @@
+"""Log-bucketed cycle histograms and bracketing percentiles (DESIGN.md §11).
+
+The jitted engines cannot keep raw per-turn samples (unbounded length
+inside a `lax.while_loop`), so latency distributions are accumulated
+into fixed log2 buckets:
+
+    bucket 0      covers [0, 1)
+    bucket k >= 1 covers [2^(k-1), 2^k)
+    bucket B-1    additionally absorbs everything >= 2^(B-2) (clamp)
+
+Bucket placement uses an exact `searchsorted` against integer power-of-
+two edges — no float log, so a sample never lands one bucket off its
+edge and the percentile *bracketing* guarantee below is exact:
+
+    percentile_bounds(hist, q) returns (lo, hi) such that any standard
+    q-quantile of the raw samples (numpy's linear interpolation between
+    order statistics included) satisfies lo <= quantile < hi,
+
+because the interpolated quantile lies between the floor/ceil order
+statistics, each of which lies inside its bucket's half-open range.
+`summarize` reports the conservative UPPER edge as p50/p95/p99 — a
+modeled-latency bound, never an underestimate (property-tested in
+tests/test_obs.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+N_BUCKETS = 24
+
+# power-of-two upper edges 1, 2, 4, ..., 2^(B-2); exact in i32/f32
+_EDGES = np.asarray([1 << k for k in range(N_BUCKETS - 1)], np.float32)
+_EDGES_J = jnp.asarray(_EDGES)
+
+
+def bucket_index(x) -> jnp.ndarray:
+    """Bucket of each non-negative f32 sample (traced; exact edges)."""
+    x = jnp.asarray(x, jnp.float32)
+    return jnp.searchsorted(_EDGES_J, x, side="right").astype(jnp.int32)
+
+
+def bucket_lo(k: int) -> float:
+    return 0.0 if k == 0 else float(2 ** (k - 1))
+
+
+def bucket_hi(k: int) -> float:
+    return math.inf if k >= N_BUCKETS - 1 else float(2 ** k)
+
+
+def percentile_bounds(hist, q: float) -> tuple:
+    """(lo, hi) edges bracketing the q-quantile of the bucketed samples.
+
+    Host-side.  `hist` is a [N_BUCKETS] count vector; q in [0, 1].
+    Empty histogram -> (0.0, 0.0)."""
+    h = np.asarray(hist, np.int64)
+    c = np.cumsum(h)
+    total = int(c[-1]) if h.size else 0
+    if total == 0:
+        return (0.0, 0.0)
+    lo_rank = int(np.floor(q * (total - 1)))   # 0-indexed order statistics
+    hi_rank = int(np.ceil(q * (total - 1)))
+    klo = int(np.searchsorted(c, lo_rank + 1))
+    khi = int(np.searchsorted(c, hi_rank + 1))
+    return (bucket_lo(klo), bucket_hi(khi))
+
+
+def percentile_upper(hist, q: float) -> float:
+    """Conservative q-quantile: the bracketing bucket's upper edge.
+
+    The clamp bucket's edge is infinite; report its (finite) lower edge
+    instead so JSON stays loadable — the value is then a lower bound and
+    the clamp is visible in the histogram itself."""
+    lo, hi = percentile_bounds(hist, q)
+    return lo if math.isinf(hi) else hi
+
+
+def summarize(hist) -> dict:
+    """{'count', 'p50', 'p95', 'p99'} of a bucketed sample set."""
+    h = np.asarray(hist, np.int64)
+    return {
+        "count": int(h.sum()),
+        "p50": percentile_upper(h, 0.50),
+        "p95": percentile_upper(h, 0.95),
+        "p99": percentile_upper(h, 0.99),
+    }

@@ -45,6 +45,13 @@ class StepTimer:
 
 
 class Heartbeat:
+    """Liveness file other processes / the coordinator can watch.
+
+    Callers that share a machine must use a per-process path (the sweep
+    derives one from the pid in the tmpdir) — a fixed filename aliases
+    concurrent runs and fools the watcher — and must `stop()` when done
+    so a stale file never impersonates a live process."""
+
     def __init__(self, path: str, interval: float = 10.0):
         self.path = path
         self.interval = interval
@@ -56,6 +63,14 @@ class Heartbeat:
             with open(self.path, "w") as f:
                 f.write(f"{step} {now}\n")
             self._last = now
+
+    def stop(self):
+        """Remove the liveness file (idempotent)."""
+        self._last = 0.0
+        try:
+            os.remove(self.path)
+        except OSError:
+            pass
 
 
 class FaultTolerantRunner:

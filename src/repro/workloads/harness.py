@@ -78,6 +78,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import protocol as P
+from repro.obs import trace as T
 
 BIG = jnp.float32(3e38)
 
@@ -189,6 +190,17 @@ def charge(st: P.Store, mask, cycles) -> P.Store:
         cycles=c.cycles + jnp.where(mask, jnp.float32(cycles), 0.0)))
 
 
+def _note_turn(s0, s1):
+    """Bucket each agent's charged cycles across one scheduler turn/trip
+    into the trace's per-turn latency histogram (DESIGN.md §11).  A
+    Python-level identity when tracing is off, so the plain engines'
+    bitwise contracts are untouched by default."""
+    if not T.enabled(s1.store.trace):
+        return s1
+    return s1._replace(store=T.record_turn(s1.store,
+                                           s0.store.counters.cycles))
+
+
 def _serial_turn(wl: Workload, s, wg, can_l, ops):
     n = s.store.counters.cycles.shape[0]
     hot = one_hot(n, wg)
@@ -212,7 +224,7 @@ def run_serial(wl: Workload, state, *ops):
         cand = can_l | can_r
         clocks = jnp.where(cand, s.store.counters.cycles, BIG)
         wg = jnp.argmin(clocks).astype(jnp.int32)
-        return _serial_turn(wl, s, wg, can_l, ops)
+        return _note_turn(s, _serial_turn(wl, s, wg, can_l, ops))
 
     return lax.while_loop(cond, body, state)
 
@@ -312,7 +324,7 @@ def run_batched(wl: Workload, state, *ops):
     def body(s):
         can_l = wl.can_local(wl, s, *ops)
         can_r = wl.can_remote(wl, s, *ops) if wl.has_remote else None
-        return _batched_trip(wl, s, can_l, can_r, None, ops)
+        return _note_turn(s, _batched_trip(wl, s, can_l, can_r, None, ops))
 
     return lax.while_loop(cond, body, state)
 
@@ -445,6 +457,11 @@ def _fire_events(wl: Workload, sched: ChurnSchedule, es: ElasticState,
             s = wl.retire(wl, s, dead, *ops)
         if wl.admit is not None:
             s = wl.admit(wl, s, join, *ops)
+        if T.enabled(s.store.trace):
+            # churn event per affected lane, stamped with the schedule
+            # clock; the harness LEAVE/CRASH/JOIN code rides the outcome
+            s = s._replace(store=T.record_event(
+                s.store, hot, T.CHURN, kind, clock=sched.clock[j]))
         alive = (alive & ~dead) | join
         # a clean LEAVE may be reclaimed at once; a CRASH's promotion
         # lease must first expire before the directory touches its state
@@ -503,7 +520,8 @@ def run_serial_elastic(wl: Workload, es: ElasticState,
             (ec <= mcc) & (ec < BIG),
             lambda e2: _fire_events(wl, sched, e2, mcc, ops),
             lambda e2: e2._replace(
-                s=_serial_turn(wl, e2.s, wg, can_l, ops)),
+                s=_note_turn(e2.s, _serial_turn(wl, e2.s, wg, can_l,
+                                                ops))),
             e)
 
     return lax.while_loop(cond, body, es)
@@ -531,7 +549,8 @@ def run_batched_elastic(wl: Workload, es: ElasticState,
             (ec <= mcc) & (ec < BIG),
             lambda e2: _fire_events(wl, sched, e2, mcc, ops),
             lambda e2: e2._replace(
-                s=_batched_trip(wl, e2.s, can_l, cr, ec, ops)),
+                s=_note_turn(e2.s, _batched_trip(wl, e2.s, can_l, cr, ec,
+                                                 ops))),
             e)
 
     return lax.while_loop(cond, body, es)

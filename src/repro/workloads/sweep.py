@@ -46,6 +46,15 @@ zero lost updates among survivors.  Every cell also runs under a
 per-cell hang watchdog (runtime/fault.py StepTimer + Heartbeat +
 interrupt timer; `REPRO_NO_WATCHDOG=1` disables).
 
+Schema v6 additions (observability PR, DESIGN.md §11): per-run
+`latency_p50/p95/p99` / `latency_turns` (conservative upper-edge
+percentiles of the per-turn modeled-latency histogram) and
+`trace_events`/`trace_dropped` (event-ring occupancy) — populated only
+under `REPRO_TRACE=1`; tracing charges no cycles, so every other column
+is bitwise unchanged by the flag.  One traced srsp cell is additionally
+exported as Perfetto-loadable Chrome-trace JSON (`--trace-out`), and
+top-level `stragglers` lists watchdog-flagged slow cells.
+
 Schema v4 additions (scope-parametric ISA PR, DESIGN.md §9): per-run
 `api` ("scoped" — every workload issues ops through `repro.core.ops`)
 and `remote_batch` (whether the workload×protocol pair can co-schedule
@@ -71,6 +80,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 import threading
 import time
 
@@ -85,10 +95,11 @@ import jax.numpy as jnp
 
 from repro import workloads
 from repro.core import protocol as P
+from repro.obs import export as obs_export, trace as T
 from repro.runtime import fault as rtfault
 from repro.workloads import faults, harness
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 DEFAULT_SCENARIOS = ["baseline", "scope_only", "rsp", "srsp"]
 
 # per-cell hang budget for the watchdog (seconds)
@@ -106,12 +117,19 @@ class CellWatchdog:
     hanging CI.  `REPRO_NO_WATCHDOG=1` disables everything (debuggers,
     profilers, very slow boxes)."""
 
-    def __init__(self, heartbeat_path: str = ".sweep_heartbeat"):
+    def __init__(self, heartbeat_path: str = None):
+        if heartbeat_path is None:
+            # per-process path in the tmpdir: a fixed repo-local filename
+            # collides across concurrent sweeps (and a crashed run's
+            # stale file would impersonate the next one)
+            heartbeat_path = os.path.join(
+                tempfile.gettempdir(), f"sweep_heartbeat.{os.getpid()}")
         self.enabled = os.environ.get("REPRO_NO_WATCHDOG", "0") != "1"
         self.timer = rtfault.StepTimer(window=50, z_thresh=3.0)
         self.hb = rtfault.Heartbeat(heartbeat_path, interval=5.0)
         self.cells = 0
         self.label = "?"
+        self.stragglers = []   # [{cell, wall_s}] — surfaced in the bench
         self._t = None
 
     def start(self, label: str):
@@ -136,8 +154,17 @@ class CellWatchdog:
         self._t.cancel()
         dt, straggler = self.timer.stop()
         if straggler:
+            self.stragglers.append({"cell": self.label,
+                                    "wall_s": round(dt, 2)})
             print(f"watchdog: straggler cell {self.label} ({dt:.1f}s, "
                   f"z>{self.timer.z_thresh})", flush=True)
+
+    def close(self):
+        """End of sweep: cancel any pending interrupt, remove the
+        heartbeat file (stale liveness files alias later runs)."""
+        if self._t is not None:
+            self._t.cancel()
+        self.hb.stop()
 
 
 def _lane0(tree):
@@ -172,6 +199,15 @@ def _churn_cols(churn_events=0, makespan=0.0, recovered=0.0,
             "churn_rate": round(rate, 5),
             "recovered": float(recovered),
             "lost_updates": int(lost_updates)}
+
+
+def _latency_cols(store) -> dict:
+    """Schema-v6 columns (DESIGN.md §11): conservative upper-edge
+    p50/p95/p99 of the per-turn modeled-latency histogram plus trace
+    ring occupancy — all None/0 unless the sweep runs under
+    REPRO_TRACE=1 (tracing charges nothing, so every other column is
+    bitwise unchanged by the flag)."""
+    return T.summary(store)
 
 
 def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
@@ -211,12 +247,13 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
         "compile_s": round(compile_s, 4),
         "steady_s_per_run": round(steady, 5),
         "steady_s_per_replica": round(steady / n_seeds, 5),
-        **_churn_cols(),
+        **_churn_cols(), **_latency_cols(lane.store),
         "events": int(lane.rounds),
         "check_ok": all(c["ok"] for c in checks),
         "check_fails": int(sum(c["check_fails"] for c in checks)),
         "makespan": counters["makespan"],
         "counters": counters,
+        "_trace_store": lane.store,
     }
 
 
@@ -247,12 +284,13 @@ def measure_host_init(mod, name, scenario, n_agents, iters):
         "compile_s": round(compile_s, 4),
         "steady_s_per_run": round(float(np.mean(times)), 5),
         "steady_s_per_replica": round(float(np.mean(times)), 5),
-        **_churn_cols(),
+        **_churn_cols(), **_latency_cols(out.store),
         "events": int(out.rounds),
         "check_ok": bool(check["ok"]),
         "check_fails": int(check["check_fails"]),
         "makespan": counters["makespan"],
         "counters": counters,
+        "_trace_store": out.store,
     }
 
 
@@ -371,11 +409,13 @@ def measure_churned_cell(iters):
         **_churn_cols(churn_events=1, makespan=counters["makespan"],
                       recovered=recovered,
                       lost_updates=check["check_fails"]),
+        **_latency_cols(fin.s.store),
         "events": int(check["events"]),
         "check_ok": bool(check["ok"]),
         "check_fails": int(check["check_fails"]),
         "makespan": counters["makespan"],
         "counters": counters,
+        "_trace_store": fin.s.store,
     }
 
 
@@ -446,6 +486,9 @@ def main(argv=None):
                     default=[16, 64])
     ap.add_argument("--no-churn", action="store_true",
                     help="skip the churned crash-recovery cell")
+    ap.add_argument("--trace-out", default="TRACE_sweep.json",
+                    help="Perfetto trace JSON for one traced srsp cell "
+                         "(only written under REPRO_TRACE=1)")
     ap.add_argument("--out", default="BENCH_workloads.json")
     args = ap.parse_args(argv)
 
@@ -454,19 +497,33 @@ def main(argv=None):
     wd = CellWatchdog()
 
     runs = []
+    trace_store, trace_label = None, None
+
+    def harvest(rec, label):
+        """Pop the stashed final store; keep the first traced srsp cell
+        for the Perfetto export."""
+        nonlocal trace_store, trace_label
+        store = rec.pop("_trace_store", None)
+        if (store is not None and trace_store is None
+                and rec["scenario"] == "srsp" and rec["trace_events"]):
+            trace_store, trace_label = store, label
+
     for name in names:
         mod = workloads.get(name)
         for n_agents in args.sizes:
             for scen in args.scenarios:
+                label = f"{name}/{scen}/n={n_agents}"
                 t0 = time.perf_counter()
-                wd.start(f"{name}/{scen}/n={n_agents}")
-                if mod.VMAPPABLE:
-                    rec = measure_vmapped(mod, name, scen, n_agents,
-                                          args.seeds, args.iters)
-                else:
-                    rec = measure_host_init(mod, name, scen, n_agents,
-                                            args.iters)
+                wd.start(label)
+                with jax.profiler.TraceAnnotation(f"cell:{label}"):
+                    if mod.VMAPPABLE:
+                        rec = measure_vmapped(mod, name, scen, n_agents,
+                                              args.seeds, args.iters)
+                    else:
+                        rec = measure_host_init(mod, name, scen, n_agents,
+                                                args.iters)
                 wd.stop()
+                harvest(rec, label)
                 rec["bench_wall_s"] = round(time.perf_counter() - t0, 2)
                 runs.append(rec)
                 print(f"{name}/{scen}/n={n_agents}: "
@@ -477,15 +534,26 @@ def main(argv=None):
             jax.clear_caches()   # per-size programs are large on CPU
 
     if not args.no_churn:
-        wd.start("worksteal/srsp+crash/churned")
-        rec = measure_churned_cell(args.iters)
+        label = "worksteal/srsp+crash/churned"
+        wd.start(label)
+        with jax.profiler.TraceAnnotation(f"cell:{label}"):
+            rec = measure_churned_cell(args.iters)
         wd.stop()
+        harvest(rec, label)
         runs.append(rec)
         print(f"churned worksteal/srsp (crash victim 0): "
               f"check_ok={rec['check_ok']} recovered={rec['recovered']:.0f} "
               f"lost_updates={rec['lost_updates']} "
               f"churn_rate={rec['churn_rate']}/kcycle", flush=True)
         jax.clear_caches()
+
+    trace_file = None
+    if trace_store is not None and args.trace_out:
+        obs_export.write_trace(args.trace_out, trace_store,
+                               label=trace_label,
+                               stragglers=wd.stragglers)
+        trace_file = args.trace_out
+        print(f"wrote {args.trace_out} (traced cell: {trace_label})")
 
     def find(name, scen, n):
         for r in runs:
@@ -625,10 +693,22 @@ def main(argv=None):
                        "lease-expiry recovery drain with lost_updates=0 "
                        "among survivors; zero-churn cells are bitwise "
                        "identical to the plain engines (tests/"
-                       "test_churn.py).",
+                       "test_churn.py). Schema v6 (DESIGN.md SS11): "
+                       "latency_p50/p95/p99/latency_turns are "
+                       "conservative upper-edge percentiles of the "
+                       "per-turn modeled-latency histogram and "
+                       "trace_events/trace_dropped the event-ring "
+                       "occupancy, populated only under REPRO_TRACE=1 "
+                       "(tracing charges nothing: every other column is "
+                       "bitwise unchanged by the flag); stragglers lists "
+                       "watchdog-flagged slow cells and one traced srsp "
+                       "cell is exported as Perfetto JSON (--trace-out).",
         "backend": jax.default_backend(),
         "donate_buffers": harness.DONATE,
         "packed_metadata": P.PACKED,
+        "trace": {"enabled": T.TRACE, "capacity": T.default_cap(),
+                  "file": trace_file, "cell": trace_label},
+        "stragglers": wd.stragglers,
         "config": {"workloads": names, "scenarios": args.scenarios,
                    "sizes": args.sizes, "seeds": args.seeds,
                    "iters": args.iters},
@@ -638,6 +718,7 @@ def main(argv=None):
         "remote_batch_ab": remote_batch_ab,
         "comparisons": comparisons,
     }
+    wd.close()
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {args.out}")

@@ -34,6 +34,7 @@ import pytest
 
 from repro import workloads
 from repro.core import protocol as P
+from repro.obs import trace as T
 from repro.workloads import faults, harness
 
 N_AGENTS = 4
@@ -52,6 +53,9 @@ def _run_elastic(bench, engine, events=(), lease=0.0):
 
 
 def _assert_bitwise_equal(a, b, ctx):
+    # trace stripped: event order differs across engines by design
+    # (tests/test_engine_equivalence.py pins the trace-on contract)
+    a, b = T.strip(a), T.strip(b)
     for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
                                       err_msg=str(ctx))

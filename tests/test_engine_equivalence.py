@@ -83,6 +83,37 @@ def test_zero_churn_elastic_pin_worksteal():
 
 
 # --------------------------------------------------------------------------
+# observability (ISSUE 7): tracing must never perturb protocol results
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", [
+    "producer_consumer",
+    pytest.param("reader_lock", marks=pytest.mark.slow),
+    pytest.param("kv_directory", marks=pytest.mark.slow),
+    pytest.param("worksteal", marks=pytest.mark.slow),
+])
+def test_trace_on_preserves_results(name):
+    """Running a workload with the trace ring enabled must leave every
+    non-trace leaf bitwise identical to the trace-off run, and must have
+    actually recorded events — the observer-effect contract DESIGN.md
+    §11 promises (trace state is carried beside the protocol state and
+    written with pure scatters; it never feeds back)."""
+    from repro import workloads
+    from repro.obs import trace as T
+    from repro.workloads import harness
+    b = workloads.get(name).build("srsp", 4, seed=3)
+    off = harness.run_batched(b.wl, T.strip(b.state), *b.ops)
+    b2 = workloads.get(name).build("srsp", 4, seed=3)
+    on = harness.run_batched(b2.wl, T.with_trace(b2.state, 512), *b2.ops)
+    assert int(on.store.trace.head) > 0, name      # tracing really ran
+    for la, lb in zip(jax.tree.leaves(off), jax.tree.leaves(T.strip(on))):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=name)
+    assert b2.check(on)["ok"], name
+    jax.clear_caches()
+
+
+# --------------------------------------------------------------------------
 # dirty ⊆ sFIFO invariant through the block-major batched ops
 # --------------------------------------------------------------------------
 

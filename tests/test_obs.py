@@ -1,0 +1,323 @@
+"""Observability subsystem tests (ISSUE 7 acceptance).
+
+Contracts:
+
+1. **percentile bracketing** (hypothesis) — for any sample set, the
+   log2-bucketed histogram's `percentile_bounds(q)` brackets the exact
+   numpy quantile: lo <= quantile < hi (or hi infinite, the clamp
+   bucket), and `percentile_upper` never under-reports a finite bound.
+2. **ring overflow** (hypothesis) — any masked append sequence keeps
+   the NEWEST `cap` events in order, reports the exact dropped count,
+   and never corrupts neighbouring slots (decode equals the host-side
+   reference event list).
+3. **zero-op disablement** — every record_* helper on a cap-0 trace
+   returns its input object untouched (Python `is`, the compiled-
+   program-identity argument in DESIGN.md §11).
+4. **export structure** — decode/chrome_trace produce Perfetto-loadable
+   event objects (metadata + X spans on agent tracks + scheduler
+   instants) and text_report renders from the JSON alone.
+5. **bench regression gate** — benchmarks/compare.py exits 0 on an
+   identical pair, nonzero on a regressed fixture (makespan, p99,
+   check_ok flip, srsp ratio drop), 0 again under --advisory; the
+   check_smoke structural gate passes a well-formed v6 doc and fails
+   a v5 one.
+"""
+import importlib.util
+import json
+import math
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import export, metrics, trace as T
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI always has it
+    HAVE_HYPOTHESIS = False
+
+BENCH = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+
+
+def _load(modname):
+    spec = importlib.util.spec_from_file_location(modname,
+                                                  BENCH / f"{modname}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+compare = _load("compare")
+check_smoke = _load("check_smoke")
+
+
+# --------------------------------------------------------------------------
+# 1. percentile bracketing
+# --------------------------------------------------------------------------
+
+def _assert_brackets(samples, q):
+    x = np.asarray(samples, np.float32)          # bucketing is f32-exact
+    hist = np.bincount(np.asarray(metrics.bucket_index(jnp.asarray(x))),
+                       minlength=metrics.N_BUCKETS)
+    lo, hi = metrics.percentile_bounds(hist, q)
+    exact = float(np.quantile(x.astype(np.float64), q))
+    assert lo <= exact < hi, (lo, exact, hi)       # inf hi trivially holds
+    upper = metrics.percentile_upper(hist, q)
+    if math.isinf(hi):
+        assert upper == lo                         # clamp: lower bound
+    else:
+        assert upper == hi and exact < upper       # never an underestimate
+
+
+def test_percentiles_bracket_fixed_samples():
+    rng = np.random.default_rng(11)
+    for q in (0.5, 0.95, 0.99):
+        _assert_brackets(rng.lognormal(3.0, 2.0, 500), q)
+        _assert_brackets([0.0], q)
+        _assert_brackets([7.0, 7.0, 7.0], q)
+        _assert_brackets(np.arange(100, dtype=np.float64), q)
+
+
+def test_bucket_edges_are_exact():
+    # a sample exactly on a power-of-two edge goes UP (half-open buckets)
+    for k in range(1, 20):
+        v = float(2 ** k)
+        assert int(metrics.bucket_index(jnp.float32(v))) == k + 1
+        assert metrics.bucket_lo(k + 1) == v
+    assert int(metrics.bucket_index(jnp.float32(0.0))) == 0
+    assert int(metrics.bucket_index(jnp.float32(0.5))) == 0
+    assert math.isinf(metrics.bucket_hi(metrics.N_BUCKETS - 1))
+
+
+def test_percentiles_of_empty_and_single():
+    assert metrics.percentile_bounds(np.zeros(metrics.N_BUCKETS), 0.99) \
+        == (0.0, 0.0)
+    h = np.zeros(metrics.N_BUCKETS, np.int64)
+    h[3] = 1                                     # one sample in [4, 8)
+    assert metrics.percentile_bounds(h, 0.5) == (4.0, 8.0)
+    assert metrics.summarize(h) == {"count": 1, "p50": 8.0, "p95": 8.0,
+                                    "p99": 8.0}
+
+
+# --------------------------------------------------------------------------
+# 2. ring overflow
+# --------------------------------------------------------------------------
+
+def _check_ring(cap, steps):
+    n = 3
+    tl = T.make(cap, n)
+    want = []                                    # host-side reference
+    for i, mask in enumerate(steps):
+        m = jnp.asarray(mask)
+        tl = T._append(tl, m,
+                       clock=jnp.full((n,), float(i), jnp.float32),
+                       agent=jnp.arange(n, dtype=jnp.int32),
+                       kind=T.LOAD, scope=1,
+                       addr=jnp.arange(n, dtype=jnp.int32) + 100 * i,
+                       cycles=1.0, outcome=T.OC_HIT)
+        want += [(float(i), a, a + 100 * i) for a in range(n) if mask[a]]
+    total = len(want)
+    assert int(tl.head) == total
+    dec = export.decode(tl)
+    assert dec["dropped"] == max(total - cap, 0) == T.dropped(tl)
+    assert dec["count"] == min(total, cap)
+    kept = want[-dec["count"]:] if dec["count"] else []
+    got = list(zip(dec["events"]["clock"].tolist(),
+                   dec["events"]["agent"].tolist(),
+                   dec["events"]["addr"].tolist()))
+    assert got == kept                           # newest `cap`, oldest-first
+    # nothing outside the valid region leaked into the decode
+    assert all(int(k) == T.LOAD for k in dec["events"]["kind"])
+
+
+def test_ring_overflow_fixed_sequences():
+    full = [True] * 3
+    _check_ring(4, [])                           # empty log decodes empty
+    _check_ring(4, [full])                       # partial fill
+    _check_ring(4, [full, full])                 # wraps by 2
+    _check_ring(1, [full, [False, True, False]])  # cap 1 keeps only newest
+    _check_ring(5, [[True, False, True]] * 4)    # masked lanes + wrap
+
+
+# --------------------------------------------------------------------------
+# 3. zero-op disablement
+# --------------------------------------------------------------------------
+
+def test_disabled_trace_is_python_identity():
+    from repro.core import protocol as P
+    cfg = P.ProtoConfig(n_caches=4, n_words=256)
+    st_ = T.strip(P.make_store(cfg))
+    assert not T.enabled(st_.trace) and T.capacity(st_.trace) == 0
+    mask = jnp.asarray([True, False, True, False])
+    addrs = jnp.zeros((4,), jnp.int32)
+    assert T.record_op(st_, mask, T.ACQUIRE, 1, addrs,
+                       st_.counters.cycles, T.OC_PROBE) is st_
+    assert T.record_event(st_, mask, T.CHURN, 1) is st_
+    assert T.record_turn(st_, st_.counters.cycles) is st_
+    assert T.summary(st_) == {"latency_p50": None, "latency_p95": None,
+                              "latency_p99": None, "latency_turns": 0,
+                              "trace_events": 0, "trace_dropped": 0}
+
+
+# --------------------------------------------------------------------------
+# 4. export structure
+# --------------------------------------------------------------------------
+
+def _tiny_traced_store():
+    from repro.core import ops as O
+    from repro.core import protocol as P
+    cfg = P.ProtoConfig(n_caches=4, n_words=256)
+    st_ = T.with_trace(P.make_store(cfg), 64)
+    proto = P.get_protocol("srsp")
+    hot = jnp.arange(4) == 1
+    st_, _ = O.acquire(proto, cfg, st_, hot, jnp.full((4,), 16, jnp.int32),
+                       0, 1, scope=O.REMOTE)
+    st_ = O.release(proto, cfg, st_, hot, jnp.full((4,), 16, jnp.int32),
+                    7, scope=O.REMOTE)
+    st_ = T.record_event(st_, hot, T.CHURN, 1)   # a crash instant
+    return cfg, st_
+
+
+def test_chrome_trace_structure(tmp_path):
+    _, st_ = _tiny_traced_store()
+    assert int(st_.trace.head) == 3
+    path = tmp_path / "trace.json"
+    doc = export.write_trace(str(path), st_, label="unit",
+                             stragglers=[{"cell": "c", "wall_s": 1.0}])
+    with open(path) as f:
+        assert json.load(f) == doc               # round-trips through JSON
+    ev = doc["traceEvents"]
+    names = {e["name"] for e in ev if e["ph"] == "M"}
+    assert "process_name" in names and "thread_name" in names
+    spans = [e for e in ev if e["ph"] == "X"]
+    assert len(spans) == 2                       # acquire + release
+    assert all(e["tid"] == 1 and e["dur"] > 0 for e in spans)
+    assert {e["cat"] for e in spans} == {"acquire", "release"}
+    inst = [e for e in ev if e["ph"] == "i"]
+    # churn instant on the scheduler track + the straggler marker
+    assert any(e["tid"] == export.SCHED_TID and "churn:crash" in e["name"]
+               for e in inst)
+    assert any("straggler" in e["name"] for e in inst)
+    meta = doc["srsp"]
+    assert meta["events"] == 3 and meta["dropped"] == 0
+    assert meta["kinds"] == {"acquire": 1, "release": 1, "churn": 1}
+    rep = export.text_report(doc)
+    assert "sRSP trace report: unit" in rep and "2 spans" in rep
+
+
+def test_report_cli_reads_exported_json(tmp_path, capsys):
+    from repro.obs import report
+    _, st_ = _tiny_traced_store()
+    path = tmp_path / "trace.json"
+    export.write_trace(str(path), st_, label="cli")
+    assert report.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "sRSP trace report: cli" in out
+
+
+# --------------------------------------------------------------------------
+# 5. bench regression gate
+# --------------------------------------------------------------------------
+
+def _bench_doc(makespan=1000.0, p99=64.0, check_ok=True, ratio=1.5):
+    return {
+        "schema_version": 6,
+        "runs": [{"workload": "worksteal", "scenario": "srsp",
+                  "n_agents": 16, "engine": "batched",
+                  "makespan": makespan, "check_ok": check_ok,
+                  "latency_p50": 8.0, "latency_p95": 32.0,
+                  "latency_p99": p99, "latency_turns": 100,
+                  "trace_events": 0, "trace_dropped": 0}],
+        "comparisons": {"pc16": {"srsp_vs_baseline": ratio,
+                                 "completes_under_crash": True,
+                                 "lost_updates": 0}},
+    }
+
+
+def _gate(base, new, *extra, tmp_path):
+    bp, np_ = tmp_path / "base.json", tmp_path / "new.json"
+    bp.write_text(json.dumps(base))
+    np_.write_text(json.dumps(new))
+    return compare.main([str(bp), str(np_), *extra])
+
+
+def test_compare_identity_is_clean(tmp_path):
+    assert _gate(_bench_doc(), _bench_doc(), tmp_path=tmp_path) == 0
+
+
+@pytest.mark.parametrize("regressed", [
+    dict(makespan=1100.0),          # +10% makespan
+    dict(p99=512.0),                # p99 blow-up
+    dict(check_ok=False),           # correctness flip
+    dict(ratio=1.2),                # srsp lost ground vs baseline
+])
+def test_compare_flags_regressions(tmp_path, regressed):
+    assert _gate(_bench_doc(), _bench_doc(**regressed),
+                 tmp_path=tmp_path) == 1
+
+
+def test_compare_advisory_reports_but_passes(tmp_path, capsys):
+    assert _gate(_bench_doc(), _bench_doc(makespan=2000.0), "--advisory",
+                 tmp_path=tmp_path) == 0
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_compare_tolerates_missing_latency_and_new_cells(tmp_path):
+    base = _bench_doc()
+    new = _bench_doc()
+    new["runs"][0]["latency_p99"] = None         # trace-off candidate
+    new["runs"].append(dict(new["runs"][0], workload="kv_directory",
+                            latency_p99=None))   # new cell, no baseline
+    assert _gate(base, new, tmp_path=tmp_path) == 0
+
+
+def test_compare_improvements_are_not_failures(tmp_path):
+    assert _gate(_bench_doc(), _bench_doc(makespan=800.0, p99=32.0,
+                                          ratio=2.0),
+                 tmp_path=tmp_path) == 0
+
+
+def test_check_smoke_rejects_v5_accepts_v6():
+    v6 = _bench_doc()
+    v6.update(remote_batch_ab=[{"check_ok": True}],
+              trace={"enabled": False, "capacity": 0, "file": None,
+                     "cell": None},
+              stragglers=[])
+    v6["runs"][0].update(api="scoped", remote_batch=True, churn_events=1,
+                         recovered=1, lost_updates=0)
+    assert check_smoke.check(v6, expect_trace=False) == []
+    v5 = json.loads(json.dumps(v6))
+    v5["schema_version"] = 5
+    del v5["runs"][0]["latency_p99"]
+    fails = check_smoke.check(v5, expect_trace=False)
+    assert any("schema_version" in f for f in fails)
+    assert any("latency columns" in f for f in fails)
+    # --expect-trace on an untraced doc must fail loudly
+    assert any("tracing was off" in f
+               for f in check_smoke.check(v6, expect_trace=True))
+
+
+# --------------------------------------------------------------------------
+# hypothesis property sweeps (CI installs hypothesis; deterministic
+# versions of both contracts above run everywhere)
+# --------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.floats(min_value=0.0, max_value=1e7,
+                              allow_nan=False),
+                    min_size=1, max_size=200),
+           st.sampled_from([0.5, 0.9, 0.95, 0.99]))
+    def test_bucketed_percentiles_bracket_exact_quantiles(samples, q):
+        _assert_brackets(samples, q)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=1, max_value=7),
+           st.lists(st.lists(st.booleans(), min_size=3, max_size=3),
+                    min_size=0, max_size=12))
+    def test_ring_overflow_drops_oldest_never_corrupts(cap, steps):
+        _check_ring(cap, steps)
