@@ -1,8 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all bench bench-full sweep sweep-smoke \
-	trace bench-compare
+.PHONY: test test-slow test-all bench bench-full bench-kernels sweep \
+	sweep-smoke trace bench-compare
 
 # Tier-1: fast suite (slow-marked full-size sims excluded via pyproject addopts)
 test:
@@ -26,6 +26,12 @@ bench-full:
 	$(PYTHON) benchmarks/protocol_engine_bench.py --apps pagerank sssp \
 	  --scenarios baseline steal_only rsp srsp --out BENCH_protocol_engine.json
 
+# Kernel micro-benchmarks (CSV to stdout): per-kernel jnp-reference wall
+# times incl. the fused-turn trip-plan and plane-commit surfaces at
+# n_wgs in {64,256,1024}, packed and boolean metadata layouts
+bench-kernels:
+	$(PYTHON) benchmarks/kernel_bench.py
+
 # Workload-subsystem sweep: protocol x workload x n_agents grid plus the
 # donation and packed-metadata A/Bs -> BENCH_workloads.json
 # (schema: benchmarks/SCHEMA.md)
@@ -40,8 +46,8 @@ sweep:
 sweep-smoke:
 	env REPRO_TRACE=1 $(PYTHON) -m repro.workloads.sweep --sizes 16 \
 	  --seeds 1 --iters 1 --no-donation --no-pack-ab \
-	  --remote-batch-sizes 16 --out BENCH_workloads.smoke.json \
-	  --trace-out TRACE_sweep.json
+	  --remote-batch-sizes 16 --no-fuse-ab \
+	  --out BENCH_workloads.smoke.json --trace-out TRACE_sweep.json
 	$(PYTHON) benchmarks/check_smoke.py BENCH_workloads.smoke.json \
 	  --expect-trace
 
@@ -58,7 +64,7 @@ trace:
 bench-compare:
 	env REPRO_TRACE=1 $(PYTHON) -m repro.workloads.sweep --sizes 16 \
 	  --seeds 1 --iters 1 --no-donation --no-pack-ab \
-	  --remote-batch-sizes 16 --out BENCH_workloads.smoke.new.json \
-	  --trace-out TRACE_sweep.new.json
+	  --remote-batch-sizes 16 --no-fuse-ab \
+	  --out BENCH_workloads.smoke.new.json --trace-out TRACE_sweep.new.json
 	$(PYTHON) benchmarks/compare.py BENCH_workloads.smoke.json \
 	  BENCH_workloads.smoke.new.json

@@ -4,7 +4,9 @@
 
 Carries everything the old Makefile inline one-liner checked (schema
 version, check_ok across the grid, scoped API, remote-batch A/B, the
-churned crash-recovery cell) plus the schema-v6 observability columns:
+churned crash-recovery cell), the schema-v7 fused-engine cells (present,
+bitwise-equal makespans against their batched twins, kernel_mode
+recorded), and the schema-v6 observability columns:
 latency percentile keys present on every run row, and — with
 --expect-trace, used when the smoke ran under REPRO_TRACE=1 — at least
 one traced cell with events, plus a loadable Chrome-trace JSON at the
@@ -25,8 +27,8 @@ LATENCY_KEYS = ("latency_p50", "latency_p95", "latency_p99",
 def check(doc: dict, *, expect_trace: bool, doc_dir: str = ".") -> list:
     """-> list of failure strings (empty = OK)."""
     fails = []
-    if doc.get("schema_version") != 6:
-        fails.append(f"schema_version {doc.get('schema_version')} != 6")
+    if doc.get("schema_version") != 7:
+        fails.append(f"schema_version {doc.get('schema_version')} != 7")
     runs = doc.get("runs", [])
     if not runs:
         fails.append("no runs")
@@ -57,6 +59,25 @@ def check(doc: dict, *, expect_trace: bool, doc_dir: str = ".") -> list:
     missing = [r for r in runs if any(k not in r for k in LATENCY_KEYS)]
     if missing:
         fails.append(f"rows missing v6 latency columns: {missing[:3]}")
+
+    # v7: fused-engine grid rows, bitwise the batched schedule, with the
+    # kernel dispatch mode recorded on every row and at top level
+    fused = [r for r in runs if r.get("engine") == "fused"]
+    if not fused:
+        fails.append("no engine=fused cell in the grid (schema v7)")
+    if doc.get("kernel_mode") not in ("pallas", "ref", "interpret"):
+        fails.append(f"bad top-level kernel_mode: {doc.get('kernel_mode')}")
+    no_mode = [r for r in runs if r.get("kernel_mode")
+               not in ("pallas", "ref", "interpret")]
+    if no_mode:
+        fails.append(f"rows missing v7 kernel_mode column: {no_mode[:3]}")
+    for f_ in fused:
+        twin = next((r for r in runs if r.get("engine") == "batched"
+                     and (r["workload"], r["scenario"], r["n_agents"])
+                     == (f_["workload"], f_["scenario"], f_["n_agents"])),
+                    None)
+        if twin and twin["makespan"] != f_["makespan"]:
+            fails.append(f"fused/batched makespan diverges: {f_} vs {twin}")
 
     tr = doc.get("trace")
     if not isinstance(tr, dict) or "enabled" not in tr:
@@ -114,8 +135,10 @@ def main(argv=None) -> int:
     rb = [r for r in runs if r.get("remote_batch")]
     ch = [r for r in runs if r.get("churn_events")]
     traced = [r for r in runs if r.get("trace_events")]
+    fused = [r for r in runs if r.get("engine") == "fused"]
     print(f"sweep smoke OK: {len(runs)} cells, {len(rb)} remote-batch, "
-          f"{len(ch)} churned, {len(traced)} traced")
+          f"{len(ch)} churned, {len(traced)} traced, {len(fused)} fused "
+          f"(kernel_mode={doc.get('kernel_mode')})")
     return 0
 
 

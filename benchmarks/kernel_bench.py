@@ -58,6 +58,40 @@ def rows():
     us = _time(jax.jit(lambda l: topk_router_ref(l, 8)), lg)
     out.append(("topk_router_8192x256_k8", us, ""))
 
+    # fused-turn megakernel surfaces (DESIGN.md §12): the trip plan and the
+    # packed-plane commit, jnp reference path, at the sweep's agent counts.
+    # Both metadata layouts ride one process — plane_commit tells packed
+    # (uint32) and boolean (REPRO_NO_PACK=1) planes apart by dtype.
+    from repro.core import bitmask
+    from repro.kernels.fused_turn.ref import plane_commit_ref, trip_plan_ref
+    for n_wgs in (64, 256, 1024):
+        clocks = jnp.asarray(rng.integers(0, 64, n_wgs).astype(np.float32))
+        can_l = jnp.asarray(rng.random(n_wgs) < 0.6)
+        can_r = jnp.asarray(rng.random(n_wgs) < 0.4)
+        bound = jnp.ones((n_wgs,), jnp.float32)
+        raddr = jnp.asarray(rng.integers(0, 64, n_wgs).astype(np.int32))
+        us = _time(jax.jit(lambda c, l, r, bd, ra: trip_plan_ref(
+            c, l, r, bd, ra, None)), clocks, can_l, can_r, bound, raddr)
+        out.append((f"fused_trip_plan_n{n_wgs}", us,
+                    f"{n_wgs*n_wgs/us:.0f}Mpair/s"))
+
+        nb, W = 64, 128
+        L = bitmask.n_lanes(W)
+        wv = jnp.asarray(rng.integers(0, 2**32, (n_wgs, nb, L),
+                                      dtype=np.uint64).astype(np.uint32))
+        wd = jnp.zeros_like(wv)
+        b = jnp.asarray(rng.integers(0, nb, n_wgs).astype(np.int32))
+        o = jnp.asarray(rng.integers(0, W, n_wgs).astype(np.int32))
+        sv = jnp.ones((n_wgs,), bool)
+        us = _time(jax.jit(plane_commit_ref), wv, wd, b, o, sv, sv)
+        out.append((f"plane_commit_packed_n{n_wgs}", us,
+                    f"{n_wgs/us:.2f}Mlane/s"))
+        wvb = bitmask.unpack(wv, W)
+        us = _time(jax.jit(plane_commit_ref), wvb, jnp.zeros_like(wvb),
+                   b, o, sv, sv)
+        out.append((f"plane_commit_bool_n{n_wgs}", us,
+                    f"{n_wgs/us:.2f}Mlane/s"))
+
     from repro.models.moe import moe_apply, moe_init
     from repro.models.registry import get_config
     cfg = get_config("granite-moe-1b-a400m", smoke=True)
@@ -69,6 +103,10 @@ def rows():
 
 
 def main():
+    from repro.kernels import common
+    # mode is chosen once per process; an interpret-mode benchmark is a
+    # user error (REPRO_KERNEL_MODE=interpret) and warns loudly
+    print(f"# kernel_mode={common.note_benchmark('kernel_bench')}")
     for name, us, derived in rows():
         print(f"{name},{us:.1f},{derived}")
 

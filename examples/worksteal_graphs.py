@@ -8,7 +8,7 @@ import argparse
 
 import numpy as np
 
-from repro.core.worksteal import WSConfig, run_app, reference_solution
+from repro.core.worksteal import ENGINES, WSConfig, run_app, reference_solution
 from repro.data.graphs import GRAPHS, collab_like, road_like, router_like
 
 SCENARIOS = ["baseline", "scope_only", "steal_only", "rsp", "srsp"]
@@ -22,10 +22,10 @@ def main():
     ap.add_argument("--nodes", type=int, default=2048)
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--engine", default="batched",
-                    choices=["batched", "serial"],
-                    help="vectorized scheduler (default) or the serial "
-                         "reference engine (identical counters, see "
-                         "DESIGN.md §4)")
+                    choices=sorted(ENGINES),
+                    help="vectorized scheduler (default), the serial "
+                         "reference engine, or the fused megakernel trip "
+                         "(identical counters, see DESIGN.md §4, §12)")
     args = ap.parse_args()
 
     g = {"pagerank": collab_like, "sssp": road_like,

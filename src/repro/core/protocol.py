@@ -72,6 +72,7 @@ from jax import lax
 
 from repro.core import bitmask, sfifo, tables
 from repro.core.costmodel import CostParams, Counters, make_counters
+from repro.kernels.fused_turn import plane_commit
 from repro.kernels.selective_flush.ops import drain_writeback
 from repro.obs import trace as obs
 
@@ -453,10 +454,13 @@ def b_load(cfg: ProtoConfig, st: Store, active, addrs
     active = jnp.asarray(active, bool)
     b, o = _split(cfg, addrs)
     lane = jnp.arange(n)
-    hit = _pl_get(st.wvalid, lane, b, o)
+    # fused metadata front-end (kernels/fused_turn, DESIGN.md §12): the
+    # pre-op valid bit (the L1 hit — also ops.load's OC_HIT/OC_MISS
+    # classification) and the plane OR come from one plane_commit pass
+    wvalid, _, hit, _ = plane_commit(st.wvalid, st.wdirty, b, o,
+                                     active, None)
     val = jnp.where(hit, st.l1[lane, b, o], st.l2[b, o])
     l1 = st.l1.at[lane, b, o].set(jnp.where(active, val, st.l1[lane, b, o]))
-    wvalid = _pl_set(st.wvalid, lane, b, o, active)
     p = cfg.params
     miss = active & ~hit
     c = st.counters
@@ -482,8 +486,11 @@ def b_store_word(cfg: ProtoConfig, st: Store, active, addrs, vals,
     lane = jnp.arange(n)
     l1 = st.l1.at[lane, b, o].set(
         jnp.where(active, jnp.asarray(vals, jnp.int32), st.l1[lane, b, o]))
-    wvalid = _pl_set(st.wvalid, lane, b, o, active)
-    wdirty = _pl_set(st.wdirty, lane, b, o, active)
+    # both plane scatters fused into one plane_commit pass (the packed
+    # Pallas kernel on TPU; the was_dirty pre-state it also returns is
+    # ops.store's write-combining classification bit)
+    wvalid, wdirty, _, _ = plane_commit(st.wvalid, st.wdirty, b, o,
+                                        active, active)
     st = st._replace(l1=l1, wvalid=wvalid, wdirty=wdirty)
 
     ft = jnp.broadcast_to(jnp.asarray(force_tail, bool), (n,))

@@ -1,16 +1,79 @@
-"""Shared kernel utilities.
+"""Shared kernel utilities: process-wide execution-mode selection.
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling).  On this CPU
-container they are validated with interpret=True, which executes the kernel
-body in Python; `default_interpret()` picks the right mode automatically.
+container they are validated with interpret=True, which executes the
+kernel body in Python — far too slow to ever be a silent benchmark path.
+`kernel_mode()` therefore picks the mode ONCE per process (the old
+`default_interpret()` re-read the backend on every call, so a mid-process
+backend change could split one run across modes):
+
+  * "pallas"     compiled Pallas kernels (backend is TPU)
+  * "ref"        the jnp references in each kernel package's ref.py —
+                 the CPU fast path AND the oracle the equivalence tests
+                 pin the kernels against
+  * "interpret"  interpret=True Pallas everywhere — debugging only,
+                 opt-in via REPRO_KERNEL_MODE=interpret
+
+REPRO_KERNEL_MODE (read at import, like REPRO_NO_PACK/REPRO_NO_DONATE)
+overrides the automatic choice with any of the three names.  Benchmarks
+call `note_benchmark()` before timing and record `kernel_mode()` in
+their JSON, so an interpret-mode number can never masquerade as a real
+measurement (warned loudly, and visible in the artifact).
 """
 from __future__ import annotations
 
+import functools
+import os
+import warnings
+
 import jax
+
+_MODES = ("pallas", "ref", "interpret")
+_FORCE = os.environ.get("REPRO_KERNEL_MODE", "")
+
+
+@functools.lru_cache(maxsize=None)
+def kernel_mode() -> str:
+    """Process-wide kernel execution mode ("pallas" / "ref" / "interpret"),
+    chosen once on first use and cached for the life of the process."""
+    if _FORCE:
+        if _FORCE not in _MODES:
+            raise ValueError(f"REPRO_KERNEL_MODE={_FORCE!r}; "
+                             f"valid: {_MODES}")
+        return _FORCE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def use_pallas() -> bool:
+    """Default kernel-vs-ref dispatch: Pallas kernels unless mode is
+    "ref" (interpret mode still routes through pallas_call)."""
+    return kernel_mode() != "ref"
+
+
+def interpret() -> bool:
+    """Default interpret flag for pallas_call when `use_pallas()`."""
+    return kernel_mode() == "interpret"
 
 
 def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Interpret flag for callers that force the Pallas path (kernel
+    equivalence tests): interpret everywhere except a real TPU.  Kept
+    for back-compat; now derived from the cached process-wide mode."""
+    return kernel_mode() != "pallas"
+
+
+def note_benchmark(what: str) -> str:
+    """Benchmark entry hook: returns `kernel_mode()` for the bench JSON
+    and warns loudly if the process would time interpret-mode kernels —
+    a number from the Python interpreter loop is not a measurement."""
+    mode = kernel_mode()
+    if mode == "interpret":
+        warnings.warn(
+            f"{what}: benchmarking with kernel_mode='interpret' "
+            f"(REPRO_KERNEL_MODE) — interpret-mode Pallas timings are "
+            f"not meaningful; unset REPRO_KERNEL_MODE or use the jnp "
+            f"reference path", stacklevel=2)
+    return mode
 
 
 def cdiv(a: int, b: int) -> int:

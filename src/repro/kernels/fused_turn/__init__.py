@@ -1,0 +1,3 @@
+from repro.kernels.fused_turn.ops import (TripPlan,  # noqa: F401
+                                          plane_commit,
+                                          trip_plan)

@@ -1,0 +1,174 @@
+"""Pallas TPU kernels for the fused batched trip (DESIGN.md §12).
+
+Two kernels, matching the two fusion surfaces of `ref.py`:
+
+  * `trip_plan_pallas` — the whole select-commuting-pops decision in ONE
+    kernel invocation: masked first-argmin reductions, the clock-lex
+    batch rule with the future-first-remote fence, and (when the
+    workload declares the remote-batching capability) the n×n address
+    dedup of the co-schedulable remote batch.  Everything lives in VMEM
+    as [1, n] rows; reductions are branch-free min/where chains so the
+    VPU never leaves the kernel for a scheduling decision.
+
+  * `plane_commit_pallas` — the packed wvalid/wdirty plane scatter of
+    `protocol.b_store_word`/`b_load` fused into one pass per lane: grid
+    over lanes, the (lane, block) row selected by a scalar-prefetched
+    index map (the `selective_flush` idiom), and the single-bit update
+    expanded IN REGISTER from the uint32 word-bitmask — build the lane
+    mask with a `broadcasted_iota` compare against `o >> 5` and OR the
+    `1 << (o & 31)` pattern in, reading the pre-op bit from the same
+    register (`core/bitmask.py` semantics; no unpacked plane ever
+    materializes).  Both planes are input/output-aliased so untouched
+    blocks stay in place.
+
+The jnp references in `ref.py` are the CPU fast path AND the oracle the
+interpret-mode unit tests pin these kernels against
+(tests/test_kernels.py) — same discipline as `selective_flush`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_turn.ref import TripPlan
+
+# ref.BIG as a Python scalar: Pallas kernels cannot capture device
+# constants, and a literal folds into the kernel body
+BIG = 3e38
+
+
+def _first_min(vals, mask, idx, n):
+    """(min, first-argmin-index) over masked lanes — first index holding
+    the min, 0 when the mask is empty (matching `jnp.argmin` over a
+    BIG-filled row, the `_batched_trip` convention; assumes real clocks
+    stay < BIG, which f32 cycle accumulators do)."""
+    m = jnp.min(jnp.where(mask, vals, BIG))
+    j = jnp.min(jnp.where(mask & (vals == m), idx, n))
+    return m, jnp.where(j == n, 0, j).astype(jnp.int32)
+
+
+def _plan_kernel(clocks_ref, can_l_ref, can_r_ref, bound_ref, raddr_ref,
+                 hor_ref, lmask_ref, rmask_ref, wg_ref, *, remote_cap):
+    n = clocks_ref.shape[-1]
+    idx = lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    clocks = clocks_ref[...]
+    can_l = can_l_ref[...] != 0
+    can_r = can_r_ref[...] != 0
+    hor = hor_ref[0, 0]
+
+    cand = can_l | can_r
+    _, wg = _first_min(clocks, cand, idx, n)
+    ms, js = _first_min(clocks, can_r, idx, n)
+    fence = jnp.min(jnp.where(can_l, clocks + bound_ref[...], BIG))
+    lex = (clocks < ms) | ((clocks == ms) & (idx < js))
+    batch = can_l & lex & (clocks <= fence) & (clocks < hor)
+    any_b = jnp.any(batch)
+    lmask = batch | (~any_b & (idx == wg) & can_l)
+
+    if remote_cap:
+        ml, jl = _first_min(clocks, can_l, idx, n)
+        lexr = (clocks < ml) | ((clocks == ml) & (idx < jl))
+        r0 = can_r & lexr & (clocks < hor)
+        raddr = raddr_ref[...]
+        ri, rj = raddr.reshape(n, 1), raddr.reshape(1, n)
+        ci, cj = clocks.reshape(n, 1), clocks.reshape(1, n)
+        ii, ij = idx.reshape(n, 1), idx.reshape(1, n)
+        r0i, r0j = r0.reshape(n, 1), r0.reshape(1, n)
+        collide = r0i & r0j & (ri == rj)
+        earlier = (cj < ci) | ((cj == ci) & (ij < ii))
+        rmask = r0 & ~jnp.any(collide & earlier, axis=1).reshape(1, n)
+    else:
+        rmask = jnp.zeros((1, n), bool)
+
+    lmask_ref[...] = lmask.astype(jnp.int32)
+    rmask_ref[...] = rmask.astype(jnp.int32)
+    wg_ref[...] = jnp.full((1, 1), wg, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("remote_cap", "interpret"))
+def trip_plan_pallas(clocks, can_l, can_r, bound, raddr, horizon,
+                     *, remote_cap: bool, interpret: bool = False
+                     ) -> TripPlan:
+    """One-kernel batched-trip plan; bitwise `ref.trip_plan_ref`.
+
+    Scalar `horizon` must be a concrete value (pass BIG for the plain
+    engines' no-fence trips); `raddr` is ignored when remote_cap=False
+    (pass zeros)."""
+    n = clocks.shape[0]
+    row = lambda x, dt: jnp.asarray(x, dt).reshape(1, n)
+    hor = jnp.asarray(horizon, jnp.float32).reshape(1, 1)
+    lmask, rmask, wg = pl.pallas_call(
+        functools.partial(_plan_kernel, remote_cap=remote_cap),
+        out_shape=(jax.ShapeDtypeStruct((1, n), jnp.int32),
+                   jax.ShapeDtypeStruct((1, n), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+        interpret=interpret,
+    )(row(clocks, jnp.float32), row(can_l, jnp.int32), row(can_r, jnp.int32),
+      row(bound, jnp.float32), row(raddr, jnp.int32), hor)
+    return TripPlan(lmask=lmask[0] != 0, rmask=rmask[0] != 0, wg=wg[0, 0])
+
+
+def _commit_kernel(b_ref, o_ref, sv_ref, sd_ref, wv_ref, wd_ref,
+                   wv_out, wd_out, wasv_ref, wasd_ref):
+    i = pl.program_id(0)
+    L = wv_ref.shape[-1]
+    o = o_ref[i]
+    # in-register uint32 bitmask expansion (core/bitmask.py semantics):
+    # word o lives in lane o >> 5, bit o & 31 — one [1, L] pattern row,
+    # no unpacked plane
+    lanes = lax.broadcasted_iota(jnp.int32, (1, L), 1)
+    bit = jnp.uint32(1) << (o.astype(jnp.uint32) & jnp.uint32(31))
+    pattern = jnp.where(lanes == (o >> 5), bit, jnp.uint32(0))
+    rv = wv_ref[0, 0, :].reshape(1, L)
+    rd = wd_ref[0, 0, :].reshape(1, L)
+    wasv_ref[0] = jnp.any((rv & pattern) != 0).astype(jnp.int32)
+    wasd_ref[0] = jnp.any((rd & pattern) != 0).astype(jnp.int32)
+    mv = jnp.where(sv_ref[i] != 0, pattern, jnp.uint32(0))
+    md = jnp.where(sd_ref[i] != 0, pattern, jnp.uint32(0))
+    wv_out[0, 0, :] = (rv | mv).reshape(L)
+    wd_out[0, 0, :] = (rd | md).reshape(L)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def plane_commit_pallas(wvalid, wdirty, b, o, set_valid, set_dirty,
+                        *, interpret: bool = False):
+    """Fused packed-plane commit; bitwise `ref.plane_commit_ref` on the
+    packed layout.  wvalid/wdirty [n, nb, L] uint32; b/o [n] i32;
+    set_valid/set_dirty [n] bool.  Grid over lanes, the target (lane,
+    block) row DMA-selected by the scalar-prefetched block index (every
+    (lane, b) pair is distinct, so steps never collide); both planes
+    aliased in place.  Returns (wvalid', wdirty', was_valid, was_dirty)."""
+    n, nb, L = wvalid.shape
+    b32 = jnp.clip(jnp.asarray(b, jnp.int32), 0, nb - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, 1, L), lambda i, b, o, sv, sd: (i, b[i], 0)),
+            pl.BlockSpec((1, 1, L), lambda i, b, o, sv, sd: (i, b[i], 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, L), lambda i, b, o, sv, sd: (i, b[i], 0)),
+            pl.BlockSpec((1, 1, L), lambda i, b, o, sv, sd: (i, b[i], 0)),
+            pl.BlockSpec((1,), lambda i, b, o, sv, sd: (i,)),
+            pl.BlockSpec((1,), lambda i, b, o, sv, sd: (i,)),
+        ),
+    )
+    wv2, wd2, wasv, wasd = pl.pallas_call(
+        _commit_kernel,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((n, nb, L), jnp.uint32),
+                   jax.ShapeDtypeStruct((n, nb, L), jnp.uint32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)),
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(b32, jnp.asarray(o, jnp.int32),
+      jnp.asarray(set_valid, jnp.int32), jnp.asarray(set_dirty, jnp.int32),
+      wvalid, wdirty)
+    return wv2, wd2, wasv != 0, wasd != 0

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
 from repro.kernels.common import default_interpret
 from repro.kernels.selective_flush.kernel import (drain_writeback_pallas,
                                                   selective_flush_pallas)
@@ -50,9 +51,10 @@ def drain_writeback(l2: jnp.ndarray, rows: jnp.ndarray, dirty: jnp.ndarray,
     Dispatches to the Pallas scatter kernel on TPU; on CPU the jnp
     reference is both the validation oracle and the fast path (XLA fuses
     the scatter-max/gather pair), so interpret-mode Pallas is reserved for
-    the kernel equivalence tests."""
+    the kernel equivalence tests.  The mode is chosen once per process
+    (`kernels.common.kernel_mode()`), never re-derived mid-run."""
     if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+        use_pallas = common.use_pallas()
     # profiler annotation: the drain scatter is the megakernel-fusion
     # candidate (ROADMAP) — make it findable in jax.profiler traces
     with jax.named_scope("kernels.drain_writeback"):

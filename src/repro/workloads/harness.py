@@ -78,6 +78,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import protocol as P
+from repro.kernels import fused_turn
 from repro.obs import trace as T
 
 BIG = jnp.float32(3e38)
@@ -137,6 +138,13 @@ def make_bench(cfg, build_workload, init_state, self_check, scenario,
 # subprocesses).
 DONATE = os.environ.get("REPRO_NO_DONATE", "0") != "1"
 _don = {"donate_argnums": (1,)} if DONATE else {}
+
+# Fused-trip escape hatch (DESIGN.md §12), read once at import like the
+# donation/packing flags: REPRO_NO_FUSE=1 makes `engine="fused"` execute
+# the plain `_batched_trip` path (the jnp reference the fused plan is
+# pinned against), so a kernel suspect can be excluded in one env var
+# without touching any engine-name plumbing.
+FUSE = os.environ.get("REPRO_NO_FUSE", "0") != "1"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -337,6 +345,83 @@ def run_batched_many(wl: Workload, states, *ops):
     cell — the sweep's few-compilations path.  Finished replicas no-op
     (every turn is internally guarded) while stragglers drain."""
     return jax.vmap(lambda s: run_batched.__wrapped__(wl, s, *ops))(states)
+
+
+def _fused_trip(wl: Workload, s, can_l, can_r, horizon, ops):
+    """`_batched_trip` with the scheduling decision fused into one
+    kernel-shaped plan and the turn execution restructured (DESIGN.md
+    §12, bitwise-equivalence argument there):
+
+      * the whole select-commuting-pops decision — batch lex/fence
+        masks, remote co-schedule address dedup, serial-fallback agent —
+        is ONE `fused_turn.trip_plan` call (the Pallas megakernel on
+        TPU; its jnp reference, extracted verbatim from `_batched_trip`,
+        on CPU);
+      * the serial LOCAL fallback is folded into the SAME masked
+        `local_turn` as the batch (`plan.lmask` one-hots the argmin
+        agent when the batch is empty and it has a local turn) — §12
+        proves the remote batch is necessarily empty in that case, so
+        the trip runs `local_turn` ONCE instead of twice.  Under vmap
+        (`run_fused_many`, the sweep path) `lax.cond` lowers to
+        executing both branches, so this halves the local-turn work per
+        trip per replica — the fused engine's steady-state win.
+
+    Costmodel charging and trace events stay OUTSIDE the kernel
+    boundary: only readiness masks, clocks, bounds and addresses cross
+    into the plan, and the turns charge/record exactly as in
+    `_batched_trip` — the trace-stripped equivalence suites hold."""
+    if not wl.has_remote:
+        return _batched_trip(wl, s, can_l, can_r, horizon, ops)
+    remote_cap = (wl.remote_turn_b is not None
+                  and wl.remote_addr is not None
+                  and wl.proto.remote_batchable)
+    raddr = wl.remote_addr(wl, s, *ops) if remote_cap else None
+    plan = fused_turn.trip_plan(
+        s.store.counters.cycles, can_l, can_r,
+        wl.remote_bound(wl, s, *ops), raddr, horizon,
+        remote_cap=remote_cap)
+
+    def do_local(st):
+        return wl.local_turn(wl, st, plan.lmask, *ops)
+
+    if remote_cap:
+        def do_remote(st):
+            return lax.cond(
+                jnp.any(plan.rmask),
+                lambda s2: wl.remote_turn_b(wl, s2, plan.rmask, *ops),
+                lambda s2: wl.remote_turn(wl, s2, plan.wg, *ops), st)
+    else:
+        def do_remote(st):
+            return wl.remote_turn(wl, st, plan.wg, *ops)
+
+    return lax.cond(jnp.any(plan.lmask), do_local, do_remote, s)
+
+
+@partial(jax.jit, static_argnums=(0,), **_don)
+def run_fused(wl: Workload, state, *ops):
+    """`run_batched` with the fused trip (DESIGN.md §12): bitwise the
+    same schedule and final state, one fused plan + at most one masked
+    local turn per trip.  REPRO_NO_FUSE=1 (read at import) swaps the
+    body back to `_batched_trip` — the engine name keeps resolving, the
+    fused math never runs."""
+    trip = _fused_trip if FUSE else _batched_trip
+
+    def cond(s):
+        return wl.live(wl, s, *ops)
+
+    def body(s):
+        can_l = wl.can_local(wl, s, *ops)
+        can_r = wl.can_remote(wl, s, *ops) if wl.has_remote else None
+        return _note_turn(s, trip(wl, s, can_l, can_r, None, ops))
+
+    return lax.while_loop(cond, body, state)
+
+
+@partial(jax.jit, static_argnums=(0,), **_don)
+def run_fused_many(wl: Workload, states, *ops):
+    """vmap of `run_fused` over a leading replica axis (the sweep's
+    few-compilations path, mirroring `run_batched_many`)."""
+    return jax.vmap(lambda s: run_fused.__wrapped__(wl, s, *ops))(states)
 
 
 # --------------------------------------------------------------------------
@@ -572,13 +657,25 @@ def engines() -> tuple:
 
 register_engine("serial", run_serial)
 register_engine("batched", run_batched)
+register_engine("fused", run_fused)
 register_engine("serial_elastic", run_serial_elastic)
 register_engine("batched_elastic", run_batched_elastic)
+
+# Vmapped (replicated) twins for the engines the sweep packs replicas
+# through — one compiled `run_*_many` per (workload, protocol, size) cell.
+ENGINES_MANY = P.Registry("vmapped engine")
+ENGINES_MANY["batched"] = run_batched_many
+ENGINES_MANY["fused"] = run_fused_many
 
 
 def runner(engine: str):
     """Registered scheduler by name; unknown names raise with the list."""
     return ENGINES[engine]
+
+
+def runner_many(engine: str):
+    """Vmapped scheduler twin by engine name (sweep replica packing)."""
+    return ENGINES_MANY[engine]
 
 
 def drain_all(cfg: P.ProtoConfig, st: P.Store) -> P.Store:

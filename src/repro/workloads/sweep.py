@@ -55,6 +55,19 @@ is bitwise unchanged by the flag.  One traced srsp cell is additionally
 exported as Perfetto-loadable Chrome-trace JSON (`--trace-out`), and
 top-level `stragglers` lists watchdog-flagged slow cells.
 
+Schema v7 additions (fused megakernel PR, DESIGN.md §12): grid rows for
+`engine="fused"` (the one-kernel batched trip) on the srsp scenario by
+default (`--fused-scenarios`), a per-run + top-level `kernel_mode`
+column ("pallas" / "ref" / "interpret" — chosen once per process,
+`kernels/common.py`) so an interpret-mode timing can never masquerade as
+a measurement, and the `fuse_ab` section: the vmapped kv_directory srsp
+cell run engine="fused" vs engine="batched" in one process at
+`--fuse-sizes` (the vmapped path is where the fusion win lives — the
+batched engine's cond branches all execute under vmap, the fused engine
+runs ONE masked local turn).  The A/B asserts identical modeled
+makespans (the §12 equivalence argument in vivo) and reports
+`steady_speedup_fused`.
+
 Schema v4 additions (scope-parametric ISA PR, DESIGN.md §9): per-run
 `api` ("scoped" — every workload issues ops through `repro.core.ops`)
 and `remote_batch` (whether the workload×protocol pair can co-schedule
@@ -70,7 +83,8 @@ Usage:
       [--workloads all] [--scenarios baseline scope_only rsp srsp]
       [--sizes 16 64] [--seeds 2] [--iters 2] [--no-donation]
       [--donation-sizes 64 256] [--no-pack-ab] [--pack-sizes 64 256]
-      [--no-remote-batch-ab] [--no-churn] [--out BENCH_workloads.json]
+      [--no-remote-batch-ab] [--no-churn] [--fused-scenarios srsp]
+      [--no-fuse-ab] [--fuse-sizes 64 256] [--out BENCH_workloads.json]
 """
 from __future__ import annotations
 
@@ -95,11 +109,12 @@ import jax.numpy as jnp
 
 from repro import workloads
 from repro.core import protocol as P
+from repro.kernels import common as kcommon
 from repro.obs import export as obs_export, trace as T
 from repro.runtime import fault as rtfault
 from repro.workloads import faults, harness
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 DEFAULT_SCENARIOS = ["baseline", "scope_only", "rsp", "srsp"]
 
 # per-cell hang budget for the watchdog (seconds)
@@ -210,8 +225,12 @@ def _latency_cols(store) -> dict:
     return T.summary(store)
 
 
-def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
-    """One compiled `run_batched_many` per cell; replicas ride the vmap."""
+def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters,
+                    engine="batched"):
+    """One compiled `runner_many(engine)` call per cell; replicas ride
+    the vmap.  engine="fused" times the one-kernel batched trip
+    (schema v7, DESIGN.md §12)."""
+    run_many = harness.runner_many(engine)
     bench = mod.build(scenario, n_agents, seed=0)
     wl = bench.wl
 
@@ -220,7 +239,7 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
         return jax.vmap(lambda s: mod.init_state(wl, s))(seeds)
 
     t0 = time.perf_counter()
-    out = harness.run_batched_many(wl, states(0))
+    out = run_many(wl, states(0))
     jax.block_until_ready(out.store.counters.cycles)
     compile_s = time.perf_counter() - t0
 
@@ -228,7 +247,7 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
     for it in range(max(1, iters)):
         st = states((it + 1) * n_seeds)
         t0 = time.perf_counter()
-        out = harness.run_batched_many(wl, st)
+        out = run_many(wl, st)
         jax.block_until_ready(out.store.counters.cycles)
         times.append(time.perf_counter() - t0)
 
@@ -241,7 +260,8 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
     steady = float(np.mean(times))
     return {
         "workload": name, "scenario": scenario, "n_agents": n_agents,
-        "engine": "batched", "vmapped": True, "n_replicas": n_seeds,
+        "engine": engine, "kernel_mode": kcommon.kernel_mode(),
+        "vmapped": True, "n_replicas": n_seeds,
         "table_geometry": _geometry(wl), **_api_cols(wl),
         "iters_timed": iters,
         "compile_s": round(compile_s, 4),
@@ -257,12 +277,14 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters):
     }
 
 
-def measure_host_init(mod, name, scenario, n_agents, iters):
+def measure_host_init(mod, name, scenario, n_agents, iters,
+                      engine="batched"):
     """Non-vmappable workloads (worksteal: host-side enqueue): fresh
     state per run, shared jit cache across runs."""
+    run = harness.runner(engine)
     bench = mod.build(scenario, n_agents, seed=0)
     t0 = time.perf_counter()
-    out = harness.run_batched(bench.wl, bench.state, *bench.ops)
+    out = run(bench.wl, bench.state, *bench.ops)
     jax.block_until_ready(out.store.counters.cycles)
     compile_s = time.perf_counter() - t0
 
@@ -270,7 +292,7 @@ def measure_host_init(mod, name, scenario, n_agents, iters):
     for it in range(max(1, iters)):
         b = mod.build(scenario, n_agents, seed=it + 1)
         t0 = time.perf_counter()
-        out = harness.run_batched(b.wl, b.state, *b.ops)
+        out = run(b.wl, b.state, *b.ops)
         jax.block_until_ready(out.store.counters.cycles)
         times.append(time.perf_counter() - t0)
         check = b.check(out)
@@ -278,7 +300,8 @@ def measure_host_init(mod, name, scenario, n_agents, iters):
     counters = harness.counters_dict(out.store)
     return {
         "workload": name, "scenario": scenario, "n_agents": n_agents,
-        "engine": "batched", "vmapped": False, "n_replicas": 1,
+        "engine": engine, "kernel_mode": kcommon.kernel_mode(),
+        "vmapped": False, "n_replicas": 1,
         "table_geometry": _geometry(bench.wl), **_api_cols(bench.wl),
         "iters_timed": iters,
         "compile_s": round(compile_s, 4),
@@ -400,7 +423,8 @@ def measure_churned_cell(iters):
     recovered = float(np.sum(np.asarray(fin.s.store.counters.recoveries)))
     return {
         "workload": "worksteal", "scenario": "srsp", "n_agents": 4,
-        "engine": "batched_elastic", "vmapped": False, "n_replicas": 1,
+        "engine": "batched_elastic", "kernel_mode": kcommon.kernel_mode(),
+        "vmapped": False, "n_replicas": 1,
         "table_geometry": _geometry(wl), **_api_cols(wl),
         "iters_timed": iters,
         "compile_s": round(compile_s, 4),
@@ -463,6 +487,51 @@ def measure_remote_batch(n_agents, n_seeds, iters, batched: bool):
     }
 
 
+# ---------------- fused-engine A/B (schema v7, DESIGN.md §12) --------------
+
+def measure_fuse(n_agents, n_seeds, iters, engine):
+    """kv_directory srsp vmapped cell, engine="fused" vs "batched" in one
+    process (engine selection is a function lookup, not an import-time
+    flag, so both arms compile as distinct jit keys honestly).  The
+    vmapped path is where the fusion win lives: under vmap the batched
+    engine's cond branches ALL execute (two local turns + both remote
+    forms per trip), the fused engine runs ONE masked local turn.
+    Modeled makespans must be IDENTICAL (§12 equivalence in vivo)."""
+    mod = workloads.get("kv_directory")
+    run_many = harness.runner_many(engine)
+    bench = mod.build("srsp", n_agents, seed=0)
+    wl = bench.wl
+
+    def states(base):
+        seeds = jnp.arange(base, base + n_seeds, dtype=jnp.int32)
+        return jax.vmap(lambda s: mod.init_state(wl, s))(seeds)
+
+    t0 = time.perf_counter()
+    out = run_many(wl, states(0))
+    jax.block_until_ready(out.store.counters.cycles)
+    compile_s = time.perf_counter() - t0
+    times = []
+    for it in range(max(1, iters)):
+        st = states((it + 1) * n_seeds)
+        t0 = time.perf_counter()
+        out = run_many(wl, st)
+        jax.block_until_ready(out.store.counters.cycles)
+        times.append(time.perf_counter() - t0)
+    checks = [mod.self_check(wl, jax.tree.map(lambda x: x[k], out))
+              for k in range(n_seeds)]
+    lane = _lane0(out)
+    return {
+        "workload": "kv_directory", "scenario": "srsp",
+        "n_agents": n_agents, "engine": engine,
+        "kernel_mode": kcommon.kernel_mode(), "n_replicas": n_seeds,
+        "compile_s": round(compile_s, 4),
+        "steady_s_per_run": round(float(np.mean(times)), 5),
+        "events": int(lane.rounds),
+        "check_ok": all(c["ok"] for c in checks),
+        "makespan": float(harness.counters_dict(lane.store)["makespan"]),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workloads", nargs="+", default=["all"])
@@ -484,6 +553,12 @@ def main(argv=None):
                     help="skip the batched-vs-serialized remote-turn A/B")
     ap.add_argument("--remote-batch-sizes", nargs="+", type=int,
                     default=[16, 64])
+    ap.add_argument("--fused-scenarios", nargs="+", default=["srsp"],
+                    help="scenarios that also get engine=fused grid rows "
+                         "(schema v7; 'none' disables)")
+    ap.add_argument("--no-fuse-ab", action="store_true",
+                    help="skip the fused-vs-batched engine A/B")
+    ap.add_argument("--fuse-sizes", nargs="+", type=int, default=[64, 256])
     ap.add_argument("--no-churn", action="store_true",
                     help="skip the churned crash-recovery cell")
     ap.add_argument("--trace-out", default="TRACE_sweep.json",
@@ -508,29 +583,36 @@ def main(argv=None):
                 and rec["scenario"] == "srsp" and rec["trace_events"]):
             trace_store, trace_label = store, label
 
+    fused_scens = [] if args.fused_scenarios == ["none"] \
+        else args.fused_scenarios
     for name in names:
         mod = workloads.get(name)
         for n_agents in args.sizes:
             for scen in args.scenarios:
-                label = f"{name}/{scen}/n={n_agents}"
-                t0 = time.perf_counter()
-                wd.start(label)
-                with jax.profiler.TraceAnnotation(f"cell:{label}"):
-                    if mod.VMAPPABLE:
-                        rec = measure_vmapped(mod, name, scen, n_agents,
-                                              args.seeds, args.iters)
-                    else:
-                        rec = measure_host_init(mod, name, scen, n_agents,
-                                                args.iters)
-                wd.stop()
-                harvest(rec, label)
-                rec["bench_wall_s"] = round(time.perf_counter() - t0, 2)
-                runs.append(rec)
-                print(f"{name}/{scen}/n={n_agents}: "
-                      f"compile={rec['compile_s']:.2f}s "
-                      f"steady={rec['steady_s_per_run'] * 1e3:.1f}ms "
-                      f"makespan={rec['makespan']:.0f} "
-                      f"check_ok={rec['check_ok']}", flush=True)
+                engines = ["batched"] + (["fused"] if scen in fused_scens
+                                         else [])
+                for engine in engines:
+                    label = f"{name}/{scen}/n={n_agents}/{engine}"
+                    t0 = time.perf_counter()
+                    wd.start(label)
+                    with jax.profiler.TraceAnnotation(f"cell:{label}"):
+                        if mod.VMAPPABLE:
+                            rec = measure_vmapped(mod, name, scen, n_agents,
+                                                  args.seeds, args.iters,
+                                                  engine)
+                        else:
+                            rec = measure_host_init(mod, name, scen,
+                                                    n_agents, args.iters,
+                                                    engine)
+                    wd.stop()
+                    harvest(rec, label)
+                    rec["bench_wall_s"] = round(time.perf_counter() - t0, 2)
+                    runs.append(rec)
+                    print(f"{label}: "
+                          f"compile={rec['compile_s']:.2f}s "
+                          f"steady={rec['steady_s_per_run'] * 1e3:.1f}ms "
+                          f"makespan={rec['makespan']:.0f} "
+                          f"check_ok={rec['check_ok']}", flush=True)
             jax.clear_caches()   # per-size programs are large on CPU
 
     if not args.no_churn:
@@ -555,10 +637,11 @@ def main(argv=None):
         trace_file = args.trace_out
         print(f"wrote {args.trace_out} (traced cell: {trace_label})")
 
-    def find(name, scen, n):
+    def find(name, scen, n, engine="batched"):
         for r in runs:
-            if (r["workload"], r["scenario"], r["n_agents"]) == \
-                    (name, scen, n) and not r["churn_events"]:
+            if (r["workload"], r["scenario"], r["n_agents"],
+                    r["engine"]) == (name, scen, n, engine) \
+                    and not r["churn_events"]:
                 return r
         return None
 
@@ -588,6 +671,23 @@ def main(argv=None):
                 entry["srsp_vs_baseline_makespan"] = round(
                     base["makespan"] / srsp["makespan"], 3)
             comparisons[f"{name}/n={n}"] = entry
+
+    # fused grid rows: the fused engine is bitwise the batched schedule
+    # (tests/test_engine_equivalence.py) — a diverging makespan here is a
+    # broken build, not a data point
+    for name in names:
+        for n in args.sizes:
+            for scen in fused_scens:
+                fus = find(name, scen, n, "fused")
+                bat = find(name, scen, n, "batched")
+                if not fus or not bat:
+                    continue
+                assert fus["makespan"] == bat["makespan"], (fus, bat)
+                comparisons[f"fused/{name}/{scen}/n={n}"] = {
+                    "makespan_equal": True,
+                    "steady_speedup_fused": round(
+                        bat["steady_s_per_run"]
+                        / fus["steady_s_per_run"], 3)}
 
     donation = []
     if not args.no_donation:
@@ -650,6 +750,30 @@ def main(argv=None):
                 "steady_speedup_batched": round(
                     off["steady_s_per_run"] / on["steady_s_per_run"], 3)}
 
+    fuse_ab = []
+    if not args.no_fuse_ab:
+        for n in args.fuse_sizes:
+            for engine in ("fused", "batched"):
+                rec = measure_fuse(n, args.seeds, args.iters, engine)
+                fuse_ab.append(rec)
+                print(f"fuse n={n} engine={engine}: "
+                      f"steady={rec['steady_s_per_run'] * 1e3:.1f}ms "
+                      f"makespan={rec['makespan']:.0f} "
+                      f"check_ok={rec['check_ok']}", flush=True)
+            jax.clear_caches()
+        for n in args.fuse_sizes:
+            on = next(r for r in fuse_ab
+                      if r["n_agents"] == n and r["engine"] == "fused")
+            off = next(r for r in fuse_ab
+                       if r["n_agents"] == n and r["engine"] == "batched")
+            # §12 equivalence in vivo: the fused trip must not change the
+            # modeled schedule at all
+            assert on["makespan"] == off["makespan"], (on, off)
+            comparisons[f"fuse/n={n}"] = {
+                "makespan_equal": True,
+                "steady_speedup_fused": round(
+                    off["steady_s_per_run"] / on["steady_s_per_run"], 3)}
+
     doc = {
         "bench": "workloads_sweep",
         "schema_version": SCHEMA_VERSION,
@@ -702,10 +826,29 @@ def main(argv=None):
                        "(tracing charges nothing: every other column is "
                        "bitwise unchanged by the flag); stragglers lists "
                        "watchdog-flagged slow cells and one traced srsp "
-                       "cell is exported as Perfetto JSON (--trace-out).",
+                       "cell is exported as Perfetto JSON (--trace-out). "
+                       "Schema v7 (DESIGN.md SS12): engine=fused grid rows "
+                       "time the one-kernel batched trip (bitwise the "
+                       "batched schedule — asserted on every fused cell "
+                       "and in fuse_ab); kernel_mode records the "
+                       "once-per-process kernel dispatch (pallas/ref/"
+                       "interpret) so an interpret-mode number can never "
+                       "masquerade as a measurement. The fusion win is "
+                       "structural on the vmapped path (batched executes "
+                       "both cond branches under vmap, fused runs ONE "
+                       "masked local turn). The unvmapped CPU rows "
+                       "(worksteal) trade the other way: lax.cond "
+                       "branches are lazy there, so the batched engine "
+                       "skips the n x n remote-dedup math whenever a "
+                       "local batch exists while the fused plan computes "
+                       "it every trip — those rows can dip below 1.0x "
+                       "(0.80x at n=64); the vmapped rows and fuse_ab "
+                       "carry the perf claim.",
         "backend": jax.default_backend(),
         "donate_buffers": harness.DONATE,
         "packed_metadata": P.PACKED,
+        "kernel_mode": kcommon.kernel_mode(),
+        "fuse_enabled": harness.FUSE,
         "trace": {"enabled": T.TRACE, "capacity": T.default_cap(),
                   "file": trace_file, "cell": trace_label},
         "stragglers": wd.stragglers,
@@ -716,6 +859,7 @@ def main(argv=None):
         "donation_ab": donation,
         "pack_ab": pack_ab,
         "remote_batch_ab": remote_batch_ab,
+        "fuse_ab": fuse_ab,
         "comparisons": comparisons,
     }
     wd.close()

@@ -110,7 +110,7 @@ class SimState(NamedTuple):
                             # (drives the batched scheduler's fence, DESIGN.md §4)
 
 
-ENGINES = ("batched", "serial")
+ENGINES = ("batched", "serial", "fused")
 
 
 # --------------------------------------------------------------------------

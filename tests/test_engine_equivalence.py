@@ -114,6 +114,90 @@ def test_trace_on_preserves_results(name):
 
 
 # --------------------------------------------------------------------------
+# fused megakernel engine (ISSUE 8): engine="fused" must be bitwise the
+# batched schedule on every registered workload (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+def _strip_leaves(out):
+    from repro.obs import trace as T
+    return jax.tree.leaves(out._replace(store=T.strip(out.store)))
+
+
+@pytest.mark.parametrize("name", ["producer_consumer", "reader_lock",
+                                  "kv_directory", "worksteal"])
+def test_fused_engine_bitwise_equals_batched(name):
+    """The fused trip (one `trip_plan` + at most one masked local turn)
+    must reproduce the batched engine's final state bitwise — through
+    `trace.strip`, like every cross-engine suite — on all four
+    registered workloads under the paper's protocol."""
+    from repro import workloads
+    from repro.workloads import harness
+    b = workloads.get(name).build("srsp", 4, seed=3)
+    bat = harness.run_batched(b.wl, b.state, *b.ops)
+    b2 = workloads.get(name).build("srsp", 4, seed=3)
+    fus = harness.run_fused(b2.wl, b2.state, *b2.ops)
+    for la, lb in zip(_strip_leaves(bat), _strip_leaves(fus)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=name)
+    assert b2.check(fus)["ok"], name
+    jax.clear_caches()
+
+
+@pytest.mark.slow
+def test_fused_engine_equals_batched_other_scenarios():
+    """The remote-batching capability differs per protocol (rsp has no
+    batched twins; baseline flushes) — the fused restructure must hold
+    on those dispatch paths too."""
+    from repro import workloads
+    from repro.workloads import harness
+    for scen in ("rsp", "baseline"):
+        b = workloads.get("producer_consumer_mc").build(scen, 4, seed=3)
+        bat = harness.run_batched(b.wl, b.state, *b.ops)
+        b2 = workloads.get("producer_consumer_mc").build(scen, 4, seed=3)
+        fus = harness.run_fused(b2.wl, b2.state, *b2.ops)
+        for la, lb in zip(_strip_leaves(bat), _strip_leaves(fus)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=scen)
+        jax.clear_caches()
+
+
+@pytest.mark.slow
+def test_fused_many_equals_batched_many():
+    """The sweep's replica-packed path: `run_fused_many` vs
+    `run_batched_many` (conds lower to selects under vmap — the fused
+    single-local-turn restructure must stay bitwise there too)."""
+    from repro import workloads
+    from repro.workloads import harness
+    mod = workloads.get("kv_directory")
+    b = mod.build("srsp", 4, seed=0)
+    seeds = jnp.arange(2, dtype=jnp.int32)
+    states = jax.vmap(lambda s: mod.init_state(b.wl, s))(seeds)
+    bat = harness.runner_many("batched")(b.wl, states)
+    states2 = jax.vmap(lambda s: mod.init_state(b.wl, s))(seeds)
+    fus = harness.runner_many("fused")(b.wl, states2)
+    for la, lb in zip(_strip_leaves(bat), _strip_leaves(fus)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    jax.clear_caches()
+
+
+def test_fused_engine_trace_on_preserves_results():
+    """Observer-effect contract on the fused engine: the trace ring live
+    must leave every non-trace leaf bitwise identical (the plan kernel
+    sits outside the charge/record path — DESIGN.md §12)."""
+    from repro import workloads
+    from repro.obs import trace as T
+    from repro.workloads import harness
+    b = workloads.get("producer_consumer").build("srsp", 4, seed=3)
+    off = harness.run_fused(b.wl, T.strip(b.state), *b.ops)
+    b2 = workloads.get("producer_consumer").build("srsp", 4, seed=3)
+    on = harness.run_fused(b2.wl, T.with_trace(b2.state, 512), *b2.ops)
+    assert int(on.store.trace.head) > 0
+    for la, lb in zip(jax.tree.leaves(off), jax.tree.leaves(T.strip(on))):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    jax.clear_caches()
+
+
+# --------------------------------------------------------------------------
 # dirty ⊆ sFIFO invariant through the block-major batched ops
 # --------------------------------------------------------------------------
 

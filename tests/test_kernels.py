@@ -104,3 +104,130 @@ def test_topk_router_sweep(t, e, k):
     np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
     np.testing.assert_allclose(np.asarray(w), np.asarray(wr),
                                rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# fused-turn megakernel (DESIGN.md §12): interpret=True vs jnp oracle
+# --------------------------------------------------------------------------
+
+def _plan_inputs(n, *, tie_every=3, seed=1):
+    rng = np.random.default_rng(seed)
+    # small-integer clocks force ties (the lex order's hard case)
+    clocks = jnp.asarray((rng.integers(0, max(2, n // tie_every),
+                                       size=n)).astype(np.float32))
+    can_l = jnp.asarray(rng.random(n) < 0.6)
+    can_r = jnp.asarray(rng.random(n) < 0.4)
+    bound = jnp.asarray(rng.integers(1, 5, size=n).astype(np.float32))
+    raddr = jnp.asarray(rng.integers(0, max(2, n // 4), size=n)
+                        .astype(np.int32))
+    return clocks, can_l, can_r, bound, raddr
+
+
+@pytest.mark.parametrize("n", [8, 64])
+@pytest.mark.parametrize("remote_cap", [True, False])
+@pytest.mark.parametrize("fenced", [True, False])
+def test_trip_plan_kernel_matches_ref(n, remote_cap, fenced):
+    from repro.kernels.fused_turn.kernel import trip_plan_pallas
+    from repro.kernels.fused_turn.ref import BIG, trip_plan_ref
+    clocks, can_l, can_r, bound, raddr = _plan_inputs(n)
+    horizon = jnp.float32(float(np.median(np.asarray(clocks)))) \
+        if fenced else None
+    want = trip_plan_ref(clocks, can_l, can_r, bound,
+                         raddr if remote_cap else None, horizon)
+    got = trip_plan_pallas(clocks, can_l, can_r, bound, raddr,
+                           BIG if horizon is None else horizon,
+                           remote_cap=remote_cap, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got.lmask),
+                                  np.asarray(want.lmask))
+    np.testing.assert_array_equal(np.asarray(got.rmask),
+                                  np.asarray(want.rmask))
+    assert int(got.wg) == int(want.wg)
+
+
+def test_trip_plan_kernel_empty_candidates():
+    """No capable lane: lmask/rmask all-False and wg falls to 0 (matching
+    jnp.argmin over an all-BIG row)."""
+    from repro.kernels.fused_turn.kernel import trip_plan_pallas
+    from repro.kernels.fused_turn.ref import BIG
+    n = 8
+    z = jnp.zeros((n,), bool)
+    got = trip_plan_pallas(jnp.arange(n, dtype=jnp.float32), z, z,
+                           jnp.ones((n,), jnp.float32),
+                           jnp.zeros((n,), jnp.int32), BIG,
+                           remote_cap=True, interpret=True)
+    assert not bool(jnp.any(got.lmask)) and not bool(jnp.any(got.rmask))
+    assert int(got.wg) == 0
+
+
+def test_trip_plan_serial_fallback_is_one_hot():
+    """Batch empty via a tight horizon, first argmin lane local-capable:
+    lmask must be exactly one_hot(wg) — the folded serial-local case."""
+    from repro.kernels.fused_turn.kernel import trip_plan_pallas
+    from repro.kernels.fused_turn.ref import trip_plan_ref
+    clocks = jnp.asarray(np.array([5.0, 2.0, 7.0, 2.0], np.float32))
+    can_l = jnp.asarray(np.array([True, True, True, True]))
+    can_r = jnp.asarray(np.array([False, False, True, False]))
+    bound = jnp.ones((4,), jnp.float32)
+    horizon = jnp.float32(0.0)   # fences out every batch lane
+    want = trip_plan_ref(clocks, can_l, can_r, bound, None, horizon)
+    got = trip_plan_pallas(clocks, can_l, can_r, bound,
+                           jnp.zeros((4,), jnp.int32), horizon,
+                           remote_cap=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got.lmask),
+                                  np.asarray(want.lmask))
+    assert int(got.wg) == 1 and np.asarray(want.lmask).sum() == 1
+    assert bool(want.lmask[1])
+
+
+@pytest.mark.parametrize("nb,W", [(4, 16), (8, 40)])   # L=1 and ragged L=2
+def test_plane_commit_kernel_matches_ref(nb, W):
+    from repro.core import bitmask
+    from repro.kernels.fused_turn.kernel import plane_commit_pallas
+    from repro.kernels.fused_turn.ref import plane_commit_ref
+    rng = np.random.default_rng(7)
+    n, L = 6, (W + 31) // 32
+    wv = jnp.asarray(rng.integers(0, 2**32, size=(n, nb, L), dtype=np.uint64)
+                     .astype(np.uint32))
+    wd = jnp.asarray(rng.integers(0, 2**32, size=(n, nb, L), dtype=np.uint64)
+                     .astype(np.uint32))
+    b = jnp.asarray(rng.integers(0, nb, size=n).astype(np.int32))
+    o = jnp.asarray(rng.integers(0, W, size=n).astype(np.int32))
+    sv = jnp.asarray(rng.random(n) < 0.7)
+    sd = jnp.asarray(rng.random(n) < 0.5)
+    want = plane_commit_ref(wv, wd, b, o, sv, sd)
+    got = plane_commit_pallas(wv, wd, b, o, sv, sd, interpret=True)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # cross-check against the boolean-layout reference through unpack
+    unpack = lambda p: np.asarray(bitmask.unpack(jnp.asarray(p), W))  # noqa: E731
+    wvb = jnp.asarray(unpack(wv))
+    wdb = jnp.asarray(unpack(wd))
+    wantb = plane_commit_ref(wvb, wdb, b, o, sv, sd)
+    np.testing.assert_array_equal(unpack(got[0]), np.asarray(wantb[0]))
+    np.testing.assert_array_equal(unpack(got[1]), np.asarray(wantb[1]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(wantb[2]))
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(wantb[3]))
+
+
+def test_plane_commit_load_shape_skips_dirty():
+    """set_dirty=None (the b_load call shape) must leave wdirty untouched
+    and still report the pre-op bits of BOTH planes."""
+    from repro.kernels.fused_turn.ref import plane_commit_ref
+    rng = np.random.default_rng(9)
+    n, nb, L = 4, 4, 1
+    wv = jnp.asarray(rng.integers(0, 2**32, size=(n, nb, L),
+                                  dtype=np.uint64).astype(np.uint32))
+    wd = jnp.asarray(rng.integers(0, 2**32, size=(n, nb, L),
+                                  dtype=np.uint64).astype(np.uint32))
+    b = jnp.asarray(np.array([0, 1, 2, 3], np.int32))
+    o = jnp.asarray(np.array([0, 5, 13, 15], np.int32))
+    sv = jnp.asarray(np.array([True, False, True, True]))
+    wv2, wd2, wasv, wasd = plane_commit_ref(wv, wd, b, o, sv, None)
+    np.testing.assert_array_equal(np.asarray(wd2), np.asarray(wd))
+    lane = np.arange(n)
+    w = np.asarray(o) >> 5
+    bit = np.uint32(1) << (np.asarray(o) & 31)
+    np.testing.assert_array_equal(
+        np.asarray(wasv), (np.asarray(wv)[lane, np.asarray(b), w] & bit) != 0)
+    np.testing.assert_array_equal(
+        np.asarray(wasd), (np.asarray(wd)[lane, np.asarray(b), w] & bit) != 0)

@@ -249,7 +249,7 @@ def test_unknown_names_raise_with_registered_list():
         worksteal.WorkStealSim(worksteal.WSConfig(n_wgs=2), "nope")
     assert "srsp" in P.protocols()
     assert set(harness.engines()) == {
-        "serial", "batched", "serial_elastic", "batched_elastic"}
+        "serial", "batched", "fused", "serial_elastic", "batched_elastic"}
     assert "baseline" in harness.scenarios()
 
 
