@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-slow test-all bench bench-full bench-kernels sweep \
-	sweep-smoke trace bench-compare
+	sweep-smoke trace bench-compare traffic
 
 # Tier-1: fast suite (slow-marked full-size sims excluded via pyproject addopts)
 test:
@@ -46,10 +46,16 @@ sweep:
 sweep-smoke:
 	env REPRO_TRACE=1 $(PYTHON) -m repro.workloads.sweep --sizes 16 \
 	  --seeds 1 --iters 1 --no-donation --no-pack-ab \
-	  --remote-batch-sizes 16 --no-fuse-ab \
+	  --remote-batch-sizes 16 --no-fuse-ab --no-serving \
 	  --out BENCH_workloads.smoke.json --trace-out TRACE_sweep.json
 	$(PYTHON) benchmarks/check_smoke.py BENCH_workloads.smoke.json \
 	  --expect-trace
+
+# Trace-driven serving demo (DESIGN.md §13): generate + replay a
+# Zipf-skewed bursty trace through kv_serving and print the request
+# latency percentiles per scenario
+traffic:
+	$(PYTHON) examples/kv_serving_demo.py
 
 # Trace the pinned crash-recovery demo cell and export Perfetto JSON
 # (load TRACE_demo.json at https://ui.perfetto.dev); see README
@@ -64,7 +70,7 @@ trace:
 bench-compare:
 	env REPRO_TRACE=1 $(PYTHON) -m repro.workloads.sweep --sizes 16 \
 	  --seeds 1 --iters 1 --no-donation --no-pack-ab \
-	  --remote-batch-sizes 16 --no-fuse-ab \
+	  --remote-batch-sizes 16 --no-fuse-ab --no-serving \
 	  --out BENCH_workloads.smoke.new.json --trace-out TRACE_sweep.new.json
 	$(PYTHON) benchmarks/compare.py BENCH_workloads.smoke.json \
 	  BENCH_workloads.smoke.new.json

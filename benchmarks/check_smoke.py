@@ -6,12 +6,15 @@ Carries everything the old Makefile inline one-liner checked (schema
 version, check_ok across the grid, scoped API, remote-batch A/B, the
 churned crash-recovery cell), the schema-v7 fused-engine cells (present,
 bitwise-equal makespans against their batched twins, kernel_mode
-recorded), and the schema-v6 observability columns:
-latency percentile keys present on every run row, and — with
---expect-trace, used when the smoke ran under REPRO_TRACE=1 — at least
-one traced cell with events, plus a loadable Chrome-trace JSON at the
-path the sweep doc names.  Exits nonzero with the offending rows on any
-failure so the CI log shows *what* broke, not just that it broke.
+recorded), the schema-v8 trace-driven traffic columns (kv_serving rows
+present with offered vs completed request accounting sane and
+per-request latency percentiles populated), and the schema-v6
+observability columns: latency percentile keys present on every run
+row, and — with --expect-trace, used when the smoke ran under
+REPRO_TRACE=1 — at least one traced cell with events, plus a loadable
+Chrome-trace JSON at the path the sweep doc names.  Exits nonzero with
+the offending rows on any failure so the CI log shows *what* broke, not
+just that it broke.
 """
 from __future__ import annotations
 
@@ -22,13 +25,15 @@ import sys
 
 LATENCY_KEYS = ("latency_p50", "latency_p95", "latency_p99",
                 "latency_turns", "trace_events", "trace_dropped")
+TRAFFIC_KEYS = ("offered_load", "completed", "zipf_s", "burstiness",
+                "latency_source")
 
 
 def check(doc: dict, *, expect_trace: bool, doc_dir: str = ".") -> list:
     """-> list of failure strings (empty = OK)."""
     fails = []
-    if doc.get("schema_version") != 7:
-        fails.append(f"schema_version {doc.get('schema_version')} != 7")
+    if doc.get("schema_version") != 8:
+        fails.append(f"schema_version {doc.get('schema_version')} != 8")
     runs = doc.get("runs", [])
     if not runs:
         fails.append("no runs")
@@ -78,6 +83,30 @@ def check(doc: dict, *, expect_trace: bool, doc_dir: str = ".") -> list:
                     None)
         if twin and twin["makespan"] != f_["makespan"]:
             fails.append(f"fused/batched makespan diverges: {f_} vs {twin}")
+
+    # v8: every row carries the traffic columns (None on non-trace-driven
+    # cells), and the trace-driven kv_serving cells account offered vs
+    # completed requests with per-request latency percentiles populated
+    no_traffic = [r for r in runs if any(k not in r for k in TRAFFIC_KEYS)]
+    if no_traffic:
+        fails.append(f"rows missing v8 traffic columns: {no_traffic[:3]}")
+    kv = [r for r in runs if r.get("workload") == "kv_serving"]
+    if not kv:
+        fails.append("no kv_serving cell in the grid (schema v8)")
+    for r in kv:
+        ok_counts = (isinstance(r.get("offered_load"), int)
+                     and isinstance(r.get("completed"), int)
+                     and 0 < r["completed"] <= r["offered_load"])
+        if not ok_counts:
+            fails.append(f"kv_serving offered/completed insane: {r}")
+        if r.get("latency_source") != "requests" \
+                or not r.get("latency_turns") \
+                or r.get("latency_p99") is None:
+            fails.append(f"kv_serving row lacks request latency: {r}")
+        # healthy non-churned cells must complete every offered request
+        if ok_counts and not r.get("churn_events") and r.get("check_ok") \
+                and r["completed"] != r["offered_load"]:
+            fails.append(f"kv_serving dropped requests without churn: {r}")
 
     tr = doc.get("trace")
     if not isinstance(tr, dict) or "enabled" not in tr:
@@ -136,8 +165,11 @@ def main(argv=None) -> int:
     ch = [r for r in runs if r.get("churn_events")]
     traced = [r for r in runs if r.get("trace_events")]
     fused = [r for r in runs if r.get("engine") == "fused"]
+    kv = [r for r in runs if r.get("workload") == "kv_serving"]
+    served = sum(r.get("completed") or 0 for r in kv)
     print(f"sweep smoke OK: {len(runs)} cells, {len(rb)} remote-batch, "
-          f"{len(ch)} churned, {len(traced)} traced, {len(fused)} fused "
+          f"{len(ch)} churned, {len(traced)} traced, {len(fused)} fused, "
+          f"{len(kv)} kv_serving ({served} requests served) "
           f"(kernel_mode={doc.get('kernel_mode')})")
     return 0
 

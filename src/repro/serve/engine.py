@@ -22,7 +22,17 @@ class Request:
 
 
 class Engine:
-    """Fixed-slot engine; prompts are right-aligned into a shared cache."""
+    """Fixed-slot continuous-batching engine.
+
+    `slots` sequences decode together in ONE jitted vmapped step; each
+    slot's cache is a B=1 cache pytree stacked on a fresh leading axis,
+    which keeps the layout model-agnostic (transformer caches batch on
+    axis 1, recurrent states elsewhere — the engine never needs to know).
+    When a slot finishes it is refilled from the queue immediately — the
+    other slots keep decoding, nothing drains.  Per-slot kv_len makes the
+    ragged lengths explicit; greedy decode per slot is independent of its
+    neighbors, so outputs are identical to running requests one at a time
+    (tests/test_serve_engine.py pins this against a serial reference)."""
 
     def __init__(self, model: Model, params, *, max_len: int = 512,
                  slots: int = 4, eos: int = -1):
@@ -30,6 +40,14 @@ class Engine:
         self.max_len, self.slots, self.eos = max_len, slots, eos
         self._decode = jax.jit(
             lambda p, c, t, kl: model.decode_step(p, c, t, kl))
+        # one decode trip for ALL slots: vmap over the stacked slot axis
+        self._decode_many = jax.jit(jax.vmap(
+            lambda p, c, t, kl: model.decode_step(p, c, t, kl),
+            in_axes=(None, 0, 0, 0)))
+        self._insert = jax.jit(
+            lambda stk, one, i: jax.tree.map(
+                lambda s, o: jax.lax.dynamic_update_index_in_dim(s, o, i, 0),
+                stk, one))
 
     def _prefill_one(self, prompt: np.ndarray):
         batch = {"tokens": jnp.asarray(prompt[None])}
@@ -38,23 +56,51 @@ class Engine:
         return logits, cache
 
     def generate(self, requests: List[Request]) -> List[Request]:
-        """Greedy generation, one slot at a time prefilled, decode batched
-        per-slot (CPU-scale correctness harness; the dry-run cells cover the
-        production batched-decode lowering)."""
-        for r in requests:
-            logits, cache = self._prefill_one(r.prompt)
-            toks = [int(jnp.argmax(logits[0]))]
-            kv_len = len(r.prompt)
-            for _ in range(r.max_new_tokens - 1):
-                t = jnp.asarray([[toks[-1]]], jnp.int32)
-                logits, cache = self._decode(self.params, cache, t,
-                                             jnp.asarray([kv_len], jnp.int32))
-                kv_len += 1
-                nxt = int(jnp.argmax(logits[0]))
-                toks.append(nxt)
-                if nxt == self.eos:
-                    break
-            r.out = np.asarray(toks, np.int32)
+        """Greedy generation with slot-based continuous batching."""
+        queue = list(range(len(requests)))
+        req = [None] * self.slots      # request index occupying each slot
+        toks: List[Optional[list]] = [None] * self.slots
+        left = np.zeros(self.slots, np.int64)    # new tokens still allowed
+        kv = np.ones(self.slots, np.int64)       # kv_len per slot
+        cur = np.zeros(self.slots, np.int64)     # last sampled token
+        zero = jax.tree.map(lambda x: x[None],
+                            self.model.init_cache(1, self.max_len))
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.slots,) + x.shape[1:]), zero)
+
+        def finish(i):
+            requests[req[i]].out = np.asarray(toks[i], np.int32)
+            req[i] = None
+
+        while True:
+            # refill every free slot before the next batched decode trip
+            for i in range(self.slots):
+                while req[i] is None and queue:
+                    r = requests[queue[0]]
+                    logits, cache = self._prefill_one(r.prompt)
+                    req[i], toks[i] = queue.pop(0), [int(jnp.argmax(
+                        logits[0]))]
+                    kv[i], cur[i] = len(r.prompt), toks[i][0]
+                    left[i] = r.max_new_tokens - 1
+                    if left[i] <= 0 or cur[i] == self.eos \
+                            or kv[i] >= self.max_len:
+                        finish(i)           # done at prefill; slot frees
+                        continue
+                    stacked = self._insert(stacked, cache, jnp.int32(i))
+            live = [i for i in range(self.slots) if req[i] is not None]
+            if not live:
+                break
+            t = jnp.asarray(cur[:, None, None], jnp.int32)   # [slots, 1, 1]
+            kl = jnp.asarray(np.clip(kv, 1, self.max_len - 1)[:, None],
+                             jnp.int32)                      # [slots, 1]
+            logits, stacked = self._decode_many(self.params, stacked, t, kl)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+            for i in live:
+                toks[i].append(int(nxt[i]))
+                cur[i], kv[i], left[i] = nxt[i], kv[i] + 1, left[i] - 1
+                if left[i] <= 0 or cur[i] == self.eos \
+                        or kv[i] >= self.max_len:
+                    finish(i)
         return requests
 
 

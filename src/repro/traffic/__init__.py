@@ -1,0 +1,24 @@
+"""Trace-driven traffic subsystem (DESIGN.md §13).
+
+Three layers, each importable on its own:
+
+  samplers — seeded, jit-able request-stream primitives: Zipfian key
+             popularity, Poisson / on-off-burst arrival processes, and
+             a Bernoulli read/write mix.  All pure functions of a PRNG
+             key and a frozen `TrafficConfig`, so any derived trace is
+             bitwise-replayable from (seed, config).
+  trace    — a compact columnar `RequestTrace` (arrival_clock / key /
+             kind / agent), generated on the fly from a config+seed,
+             saved/loaded as .npz, and replayable at millions of
+             simulated requests through the vmapped turn path.
+  driver   — the adapter from a RequestTrace to the workload harness's
+             can_local / can_remote / remote_bound / live machinery
+             (per-agent request streams + cursors), so ANY registered
+             workload can be traffic-driven instead of self-driven.
+
+`repro.workloads.kv_serving` is the first consumer: an LLM-serving-tier
+workload (hot KV-page ownership, Zipf-skewed lookups, bursty arrivals)
+built entirely on these layers.
+"""
+from repro.traffic.samplers import TrafficConfig  # noqa: F401
+from repro.traffic.trace import RequestTrace      # noqa: F401

@@ -1,0 +1,142 @@
+"""Trace -> harness adapter (DESIGN.md §13).
+
+The workload harness schedules *turns* (can_local / can_remote /
+remote_bound / live); a `RequestTrace` is a flat list of *requests*.
+This module is the bridge: it regroups a trace into per-agent streams
+plus a cursor, and derives every scheduler predicate the harness needs
+from (streams, cursor) alone — so ANY registered workload can be
+traffic-driven by embedding an `AgentStreams` + `cursor` in its state
+and binding these functions (thin module-level wrappers keep the
+Workload hashable).
+
+Driver contract (what a traffic-driven workload's turns must do):
+
+  * an agent's NEXT request is `streams.<col>[i, cursor[i]]`; the turn
+    that completes it advances `cursor[i]` by 1 (a retried turn — e.g.
+    a lost CAS under fault injection — leaves the cursor in place);
+  * requests classify by ownership: `remote[i, j]` is True iff the
+    request's key is owned by another agent — the can_local/can_remote
+    split is exactly this bit at the cursor;
+  * a turn first *waits* for the request: charge
+    `max(0, arrival - clock)` idle cycles before the protocol ops, so
+    completion latency (completion clock - arrival clock) is measured
+    against the arrival process, not the scheduler;
+  * every completing turn charges at least `min_turn_cost` compute
+    cycles, which is what makes `remote_bound` a sound fence: with
+    `lbnr[i, j]` = the run length of local requests starting at j, the
+    next remote turn of lane i is at least `lbnr * min_turn_cost`
+    cycles away (waits only push it further);
+  * `quota[i]` is the retirement-adjustable stream length: elastic
+    retire forgives a dead agent's unserved tail (`quota := cursor`),
+    admit re-opens one request.  Offered load stays `streams`' full
+    length — the self-check reports offered vs completed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.traffic import trace as TR
+
+BIG = jnp.float32(3e38)
+
+
+class AgentStreams(NamedTuple):
+    """Per-agent request matrices, [n_agents, m] each (+ [n] quota)."""
+    arrival: jnp.ndarray   # f32 arrival clocks, sorted along axis 1
+    key: jnp.ndarray       # i32 requested key
+    kind: jnp.ndarray      # i32 0=read / 1=write
+    remote: jnp.ndarray    # bool key owned by another agent
+    lbnr: jnp.ndarray      # i32 local-run length starting here (0 if remote)
+    quota: jnp.ndarray     # i32 serviceable stream length per agent
+
+
+def _local_runs(remote: jnp.ndarray) -> jnp.ndarray:
+    """lbnr[i, j]: consecutive local requests starting at column j."""
+    def step(nxt, rem_col):
+        run = jnp.where(rem_col, 0, nxt + 1)
+        return run, run
+    _, runs = lax.scan(step, jnp.zeros(remote.shape[0], jnp.int32),
+                       remote.T, reverse=True)
+    return runs.T
+
+
+def from_trace(tr: TR.RequestTrace, n_agents: int, m: int) -> AgentStreams:
+    """Regroup a flat trace into per-agent streams of exactly `m`
+    requests each (the `generate` invariant; ragged traces must be
+    padded by the caller).  Pure jnp — callable under jit/vmap."""
+    order = jnp.lexsort((tr.arrival, tr.agent))
+    take = lambda c: c[order].reshape(n_agents, m)  # noqa: E731
+    arrival = take(tr.arrival)
+    key = take(tr.key)
+    kind = take(tr.kind)
+    remote = TR.owner(key, n_agents) \
+        != jnp.arange(n_agents, dtype=jnp.int32)[:, None]
+    return AgentStreams(arrival=arrival, key=key, kind=kind,
+                        remote=remote, lbnr=_local_runs(remote),
+                        quota=jnp.full((n_agents,), m, jnp.int32))
+
+
+def at_cursor(streams: AgentStreams, cursor):
+    """(arrival, key, kind, remote) of each agent's next request.
+    Exhausted lanes return their LAST request's columns — callers gate
+    on `pending` before acting on them."""
+    n, m = streams.arrival.shape
+    lanes = jnp.arange(n)
+    cur = jnp.clip(cursor, 0, m - 1)
+    return (streams.arrival[lanes, cur], streams.key[lanes, cur],
+            streams.kind[lanes, cur], streams.remote[lanes, cur])
+
+
+def pending(streams: AgentStreams, cursor):
+    """[n] bool: lanes with unserved requests inside their quota."""
+    return cursor < streams.quota
+
+
+def can_local(streams: AgentStreams, cursor):
+    _, _, _, rem = at_cursor(streams, cursor)
+    return pending(streams, cursor) & ~rem
+
+
+def can_remote(streams: AgentStreams, cursor):
+    _, _, _, rem = at_cursor(streams, cursor)
+    return pending(streams, cursor) & rem
+
+
+def remote_bound(streams: AgentStreams, cursor, min_turn_cost):
+    """[n] f32 lower bound on cycles before each lane's next remote turn
+    (the harness fence input; BIG for exhausted lanes)."""
+    n, m = streams.arrival.shape
+    lanes = jnp.arange(n)
+    cur = jnp.clip(cursor, 0, m - 1)
+    run = streams.lbnr[lanes, cur].astype(jnp.float32)
+    return jnp.where(pending(streams, cursor),
+                     run * jnp.float32(min_turn_cost), BIG)
+
+
+def wait_cycles(streams: AgentStreams, cursor, clocks):
+    """[n] f32 idle cycles each lane charges before serving its next
+    request: the request may not have arrived yet."""
+    arr, _, _, _ = at_cursor(streams, cursor)
+    return jnp.maximum(arr - clocks, 0.0)
+
+
+def retire(streams: AgentStreams, cursor, dead) -> AgentStreams:
+    """Forgive a dead agent's unserved tail (bitwise identity when
+    `dead` is all-False — the elastic contract)."""
+    dead = jnp.asarray(dead, bool)
+    return streams._replace(
+        quota=jnp.where(dead, jnp.minimum(streams.quota, cursor),
+                        streams.quota))
+
+
+def admit(streams: AgentStreams, cursor, join) -> AgentStreams:
+    """Re-open one request for a (re-)joining agent, bounded by the
+    stream's physical length."""
+    join = jnp.asarray(join, bool)
+    m = streams.arrival.shape[1]
+    return streams._replace(
+        quota=jnp.where(join, jnp.minimum(cursor + 1, jnp.int32(m)),
+                        streams.quota))

@@ -1,0 +1,84 @@
+"""Seeded, jit-able traffic samplers (DESIGN.md §13).
+
+Every sampler is a pure function of an explicit `jax.random` key plus
+static shape/config arguments — no hidden state, no host RNG — so any
+stream drawn here is bitwise-replayable from (seed, config) and vmaps
+cleanly over seeds (the sweep's replica axis).
+
+  * Key popularity is Zipfian: P(rank r) ∝ (r+1)^-s, sampled by exact
+    inverse-CDF search against the normalized cumulative weights (no
+    rejection loop — fixed work per sample, jit-friendly).
+  * Arrivals are a renewal process on exponential gaps with mean
+    `gap_mean`, optionally modulated by an on/off burst envelope:
+    consecutive runs of `burst_len` requests flip a fair coin between an
+    ON phase (gaps divided by `burstiness`) and an OFF phase (gaps
+    multiplied by it).  `burstiness=1.0` makes both phases the identity,
+    so the envelope degenerates to plain Poisson *with the same draws* —
+    one code path, no branch between processes.
+  * The read/write mix is a Bernoulli(`write_frac`) per request.
+
+Arrival clocks are cumulative sums of non-negative gaps: sorted and
+non-negative by construction (property-tested in tests/test_traffic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """Frozen description of one request stream per agent (hashable —
+    rides inside workload configs as a jit static argument)."""
+    requests_per_agent: int = 24
+    zipf_s: float = 1.1         # key-popularity skew exponent
+    gap_mean: float = 32.0      # mean inter-arrival gap (cycles)
+    burstiness: float = 1.0     # 1.0 = Poisson; B>1 = on/off with rate x/÷B
+    burst_len: int = 8          # requests per on/off phase
+    write_frac: float = 0.5     # P(local request is a write)
+    remote_frac: float = 0.125  # P(request targets the global key space)
+
+
+def zipf_cdf(n_keys: int, s: float) -> jnp.ndarray:
+    """Normalized cumulative Zipf weights over ranks 0..n_keys-1."""
+    ranks = jnp.arange(n_keys, dtype=jnp.float32)
+    w = (ranks + 1.0) ** jnp.float32(-s)
+    c = jnp.cumsum(w)
+    return c / c[-1]
+
+
+def zipf_ranks(key, n: int, n_keys: int, s: float) -> jnp.ndarray:
+    """[n] i32 Zipf(s)-distributed ranks in [0, n_keys) via inverse CDF."""
+    u = jax.random.uniform(key, (n,), jnp.float32)
+    cdf = zipf_cdf(n_keys, s)
+    return jnp.clip(jnp.searchsorted(cdf, u, side="right"),
+                    0, n_keys - 1).astype(jnp.int32)
+
+
+def arrival_clocks(key, n: int, cfg: TrafficConfig) -> jnp.ndarray:
+    """[n] f32 sorted, non-negative arrival clocks for one agent stream.
+
+    Renewal process with exponential gaps (mean `gap_mean`), modulated by
+    the on/off burst envelope; `burstiness=1.0` IS the Poisson process
+    (the envelope multiplies every gap by exactly 1.0)."""
+    kg, kp = jax.random.split(key)
+    gaps = jax.random.exponential(kg, (n,), jnp.float32) \
+        * jnp.float32(cfg.gap_mean)
+    n_phases = -(-n // cfg.burst_len)   # ceil
+    on = jax.random.bernoulli(kp, 0.5, (n_phases,))
+    b = jnp.float32(cfg.burstiness)
+    envelope = jnp.where(on, 1.0 / b, b)
+    phase = jnp.arange(n, dtype=jnp.int32) // cfg.burst_len
+    return jnp.cumsum(gaps * envelope[phase])
+
+
+def request_kinds(key, n: int, write_frac: float) -> jnp.ndarray:
+    """[n] i32 request kinds: 0 = read, 1 = write."""
+    return jax.random.bernoulli(key, write_frac, (n,)).astype(jnp.int32)
+
+
+def remote_draws(key, n: int, remote_frac: float) -> jnp.ndarray:
+    """[n] bool: which requests target the global (any-owner) key space."""
+    return jax.random.bernoulli(key, remote_frac, (n,))

@@ -1,0 +1,119 @@
+"""Columnar request traces (DESIGN.md §13).
+
+A `RequestTrace` is four flat, equal-length columns — the minimal wire
+format for "who asks for what, when":
+
+    arrival  [M] f32  simulated arrival clock (cycles)
+    key      [M] i32  requested key in [0, n_keys)
+    kind     [M] i32  0 = read, 1 = write
+    agent    [M] i32  issuing agent (front-end shard) in [0, n_agents)
+
+`generate` draws one from the samplers, pure-jnp end to end, so it is
+(a) bitwise-replayable from (seed, config) — the sweep's cross-engine
+"same trace" guarantee — and (b) vmappable over seeds, which is how the
+kv_serving workload replays millions of simulated requests through
+`run_batched_many` without materializing per-replica traces on the host.
+
+Key placement is the subsystem's one canonical convention: key `k` is
+owned by agent `k % n_agents` (the same interleaving `kv_directory`
+uses for buckets).  Each request draws its key from the issuer's OWN
+shard with probability `1 - remote_frac` (Zipf over own ranks) and from
+the GLOBAL Zipf otherwise — so remote fetches concentrate on the
+globally hottest keys, the skew regime the paper's asymmetric-sharing
+claim lives or dies on.  Cross-owner requests are forced to reads (a
+remote write would need ownership migration — ROADMAP's dynamic
+asymmetry item).
+
+`save`/`load` round-trip a trace plus its provenance (config, seed,
+shape) through one .npz; `tests/test_traffic.py` pins the round-trip
+and the regenerate-equals-saved bitwise property.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.traffic import samplers as S
+
+
+class RequestTrace(NamedTuple):
+    arrival: jnp.ndarray   # [M] f32 sorted-within-agent arrival clocks
+    key: jnp.ndarray       # [M] i32 requested key
+    kind: jnp.ndarray      # [M] i32 0=read / 1=write
+    agent: jnp.ndarray     # [M] i32 issuing agent
+
+
+def owner(key, n_agents: int):
+    """Canonical placement: key k lives on agent k % n_agents."""
+    return jnp.mod(jnp.asarray(key, jnp.int32), jnp.int32(n_agents))
+
+
+def generate(cfg: S.TrafficConfig, n_agents: int, n_keys: int,
+             seed) -> RequestTrace:
+    """Draw the canonical trace for (cfg, n_agents, n_keys, seed).
+
+    Pure jnp (traced `seed` ok): one PRNG fold per agent, independent
+    sub-keys per column.  Rows come out globally sorted by arrival clock
+    (ties: agent, then issue order) — a stable canonical order that is
+    bitwise-reproducible run to run."""
+    if n_keys % n_agents != 0:
+        raise ValueError(f"n_keys ({n_keys}) must be a multiple of "
+                         f"n_agents ({n_agents}) for the canonical "
+                         f"interleaved placement")
+    m = cfg.requests_per_agent
+    own_ranks = n_keys // n_agents
+    root = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+
+    def one_agent(a):
+        ka = jax.random.fold_in(root, a)
+        sub = [jax.random.fold_in(ka, j) for j in range(5)]
+        arr = S.arrival_clocks(sub[0], m, cfg)
+        gkey = S.zipf_ranks(sub[1], m, n_keys, cfg.zipf_s)
+        lrank = S.zipf_ranks(sub[2], m, own_ranks, cfg.zipf_s)
+        rem = S.remote_draws(sub[3], m, cfg.remote_frac)
+        wr = S.request_kinds(sub[4], m, cfg.write_frac)
+        key = jnp.where(rem, gkey, a + lrank * n_agents)
+        kind = jnp.where(owner(key, n_agents) == a, wr, 0)
+        return arr, key, kind
+
+    lanes = jnp.arange(n_agents, dtype=jnp.int32)
+    arr, key, kind = jax.vmap(one_agent)(lanes)
+    agent = jnp.broadcast_to(lanes[:, None], (n_agents, m))
+    pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None, :],
+                           (n_agents, m))
+    flat = lambda x: x.reshape(-1)  # noqa: E731
+    order = jnp.lexsort((flat(pos), flat(agent), flat(arr)))
+    return RequestTrace(arrival=flat(arr)[order],
+                        key=flat(key)[order].astype(jnp.int32),
+                        kind=flat(kind)[order].astype(jnp.int32),
+                        agent=flat(agent)[order].astype(jnp.int32))
+
+
+def save(path: str, tr: RequestTrace, *, cfg: S.TrafficConfig,
+         n_agents: int, n_keys: int, seed: int) -> None:
+    """One .npz: the four columns + a JSON provenance record."""
+    meta = {"config": dataclasses.asdict(cfg), "n_agents": int(n_agents),
+            "n_keys": int(n_keys), "seed": int(seed)}
+    np.savez(path,
+             arrival=np.asarray(tr.arrival, np.float32),
+             key=np.asarray(tr.key, np.int32),
+             kind=np.asarray(tr.kind, np.int32),
+             agent=np.asarray(tr.agent, np.int32),
+             meta=np.frombuffer(json.dumps(meta).encode(), np.uint8))
+
+
+def load(path: str):
+    """-> (RequestTrace, meta dict with 'config' rehydrated)."""
+    with np.load(path) as z:
+        tr = RequestTrace(arrival=jnp.asarray(z["arrival"]),
+                          key=jnp.asarray(z["key"]),
+                          kind=jnp.asarray(z["kind"]),
+                          agent=jnp.asarray(z["agent"]))
+        meta = json.loads(bytes(z["meta"]).decode())
+    meta["config"] = S.TrafficConfig(**meta["config"])
+    return tr, meta

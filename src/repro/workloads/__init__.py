@@ -28,6 +28,7 @@ _MODULES = {
     "producer_consumer_mc": "repro.workloads.producer_consumer_mc",
     "reader_lock": "repro.workloads.reader_lock",
     "kv_directory": "repro.workloads.kv_directory",
+    "kv_serving": "repro.workloads.kv_serving",
 }
 
 

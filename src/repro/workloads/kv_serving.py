@@ -1,0 +1,292 @@
+"""KV serving tier — trace-driven hot-page ownership under Zipf skew.
+
+The ROADMAP's "millions of users" workload: an LLM serving tier where
+every cache owns a shard of hot KV pages (`serve/engine.py`'s slot
+cache, scaled out to n_agents shards) and requests arrive from the
+traffic subsystem (DESIGN.md §13) instead of a self-driven quota —
+Zipf-skewed key popularity, Poisson/bursty arrivals, configurable
+read/write mix.  Each agent serves its stream in arrival order:
+
+  * local turns (the hot path): the owner serves a request for one of
+    its OWN pages — wait for the arrival clock, acquire the page lock
+    at LOCAL scope, read the value THROUGH the store (stale-read
+    check), apply the write if the request is one, release, charge
+    `task_cost` serving compute.  Ownership partitions the pages, so
+    local turns of distinct agents commute (§4 obligation).
+  * remote turns (the rare path): a cross-owner lookup of a hot page —
+    remote acquire, read version+value through the store, compare
+    against bookkept ground truth, release.  Concurrent lookups target
+    their requests' pages; the harness's address dedup (§9) co-schedules
+    distinct-page lookups in one masked turn.  A lookup whose CAS loses
+    (only possible when a fault strands a lock) RETRIES: the cursor
+    stays, the lane tries again next turn — so a crash-stranded lock
+    shows up as `done=False`, never as silent corruption.
+  * per-request completion latency (completion clock − arrival clock)
+    accumulates into a state-resident log2 histogram — the same bucket
+    math as the §11 trace — so `latency_p50/p95/p99` fill from the
+    *request* distribution even with tracing compiled off.
+
+Self-checks: in-run stale-read fails + offered-vs-completed accounting
++ post-run drained-L2 audit of every page (no lost pages, no stale
+reads).  The schedule depends only on the trace and bookkeeping, never
+on store reads, so a protocol bug changes checked values — not turns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops as O
+from repro.core import protocol as P
+from repro.core import tables
+from repro.core.costmodel import CostParams
+from repro.obs import metrics
+from repro.traffic import driver as D
+from repro.traffic import samplers as S
+from repro.traffic import trace as TR
+from repro.workloads import harness
+
+VMAPPABLE = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    n_agents: int = 8
+    pages_per_agent: int = 2
+    traffic: S.TrafficConfig = S.TrafficConfig()
+    task_cost: float = 20.0      # serving compute per completed request
+    fifo_cap: int = 16
+    lr_tbl: tables.TableGeometry = tables.LR_GEOMETRY
+    pa_tbl: tables.TableGeometry = tables.PA_GEOMETRY
+    params: CostParams = dataclasses.field(default_factory=CostParams)
+
+    @property
+    def n_pages(self) -> int:
+        return self.n_agents * self.pages_per_agent
+
+    @property
+    def bstride(self) -> int:
+        return 16   # lock / version / value in one block
+
+    @property
+    def n_words(self) -> int:
+        return self.n_pages * self.bstride
+
+    def proto_cfg(self) -> P.ProtoConfig:
+        return P.ProtoConfig(n_caches=self.n_agents, n_words=self.n_words,
+                             fifo_cap=self.fifo_cap, lr_tbl=self.lr_tbl,
+                             pa_tbl=self.pa_tbl, params=self.params)
+
+
+class ServeState(NamedTuple):
+    store: P.Store
+    streams: D.AgentStreams   # [n, m] request columns (traffic driver)
+    cursor: jnp.ndarray       # [n] i32 completed requests per agent
+    ver: jnp.ndarray          # [n_pages] i32 bookkeeping: true version
+    val: jnp.ndarray          # [n_pages] i32 bookkeeping: true value
+    lat_hist: jnp.ndarray     # [metrics.N_BUCKETS] i32 request latencies
+    check_fails: jnp.ndarray  # [] i32
+    rounds: jnp.ndarray       # [] i32
+
+
+def _max_events(cfg: Config) -> int:
+    # healthy: one turn per request; slack covers fault-injected retries
+    return cfg.n_agents * (cfg.traffic.requests_per_agent + 16) \
+        + 16 * cfg.n_agents
+
+
+def _lanes(cfg: Config):
+    return jnp.arange(cfg.n_agents, dtype=jnp.int32)
+
+
+def _charge_wait(st: P.Store, mask, streams, cursor) -> P.Store:
+    """Idle until the masked lanes' next requests have arrived."""
+    wait = D.wait_cycles(streams, cursor, st.counters.cycles)
+    c = st.counters
+    return st._replace(counters=c._replace(
+        cycles=c.cycles + jnp.where(mask, wait, 0.0)))
+
+
+def _note_latency(lat_hist, st: P.Store, mask, streams, cursor):
+    """Completion latency (now − arrival) of the masked lanes' requests,
+    bucketed with the §11 log2 edges."""
+    arr, _, _, _ = D.at_cursor(streams, cursor)
+    lat = jnp.maximum(st.counters.cycles - arr, 0.0)
+    idx = metrics.bucket_index(jnp.where(mask, lat, 0.0))
+    return lat_hist.at[idx].add(mask.astype(jnp.int32))
+
+
+def _can_local(wl, s: ServeState):
+    return D.can_local(s.streams, s.cursor)
+
+
+def _can_remote(wl, s: ServeState):
+    return D.can_remote(s.streams, s.cursor)
+
+
+def _remote_bound(wl, s: ServeState):
+    return D.remote_bound(s.streams, s.cursor, wl.cfg.task_cost)
+
+
+def _remote_addr(wl, s: ServeState):
+    _, page, _, _ = D.at_cursor(s.streams, s.cursor)
+    return page * jnp.int32(wl.cfg.bstride)
+
+
+def _live(wl, s: ServeState):
+    return jnp.any(D.pending(s.streams, s.cursor)) \
+        & (s.rounds < _max_events(wl.cfg))
+
+
+def _retire(wl, s: ServeState, dead, *ops) -> ServeState:
+    """Elastic retirement (§10): a dead shard's unserved tail is
+    forgiven; its pages keep their bookkept ground truth so the post-run
+    audit still scores every committed write."""
+    return s._replace(streams=D.retire(s.streams, s.cursor, dead))
+
+
+def _admit(wl, s: ServeState, join, *ops) -> ServeState:
+    return s._replace(streams=D.admit(s.streams, s.cursor, join))
+
+
+def _delta(lanes, cursor, page):
+    return (lanes + 1) + jnp.mod(cursor * 7 + page, jnp.int32(5))
+
+
+def _local_turn(wl, s: ServeState, mask) -> ServeState:
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    lanes = _lanes(cfg)
+    np_ = cfg.n_pages
+    _, page, kind, _ = D.at_cursor(s.streams, s.cursor)
+    lockp = page * cfg.bstride
+    delta = _delta(lanes, s.cursor, page)
+    newval = s.val[page] + delta
+
+    st = _charge_wait(s.store, mask, s.streams, s.cursor)
+    st, old = O.acquire(wl.proto, pc, st, mask, lockp, 0, 1, scope=O.LOCAL)
+    # a lost CAS (possible only when a fault strands a lock — healthy
+    # runs always see 0) leaves the request in place for a retry turn
+    ok = mask & (old == 0)
+    st, vcur = O.load(pc, st, ok, lockp + 2)
+    wr = ok & (kind == 1)
+    st, _ = O.store(pc, st, wr, lockp + 2, newval)
+    st, _ = O.store(pc, st, wr, lockp + 1, s.ver[page] + 1)
+    st = O.release(wl.proto, pc, st, ok, lockp, 0, scope=O.LOCAL)
+    st = harness.charge(st, ok, cfg.task_cost)
+
+    fails = jnp.sum((ok & (vcur != s.val[page])).astype(jnp.int32))
+    tgt = jnp.where(wr, page, np_)
+    return ServeState(
+        store=st,
+        streams=s.streams,
+        cursor=s.cursor + ok.astype(jnp.int32),
+        ver=s.ver.at[tgt].add(1, mode="drop"),
+        val=s.val.at[tgt].add(delta, mode="drop"),
+        lat_hist=_note_latency(s.lat_hist, st, ok, s.streams, s.cursor),
+        check_fails=s.check_fails + fails,
+        rounds=s.rounds + jnp.sum(mask.astype(jnp.int32)))
+
+
+def _remote_turn_b(wl, s: ServeState, rmask) -> ServeState:
+    """Masked multi-agent cross-owner lookup (§9 capability): every
+    masked lane resolves its request's page in one set of scoped ops.
+    Distinct lanes' requests target distinct addresses by the harness's
+    dedup, and a lookup mutates only its own lane's cursor/latency —
+    the pairwise-commutation obligation."""
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    do = jnp.asarray(rmask, bool) & _can_remote(wl, s)
+    _, page, _, _ = D.at_cursor(s.streams, s.cursor)
+    lockp = page * cfg.bstride
+
+    st = _charge_wait(s.store, do, s.streams, s.cursor)
+    st, old = O.acquire(wl.proto, pc, st, do, lockp, 0, 1, scope=O.REMOTE)
+    ok = do & (old == 0)      # lost CAS -> retry next turn (cursor stays)
+    st, rv = O.load(pc, st, ok, lockp + 1)
+    st, vv = O.load(pc, st, ok, lockp + 2)
+    st = O.release(wl.proto, pc, st, ok, lockp, 0, scope=O.REMOTE)
+    st = harness.charge(st, ok, cfg.task_cost)
+
+    fails = jnp.sum(jnp.where(ok, (rv != s.ver[page]).astype(jnp.int32)
+                              + (vv != s.val[page]).astype(jnp.int32), 0))
+    return ServeState(
+        store=st,
+        streams=s.streams,
+        cursor=s.cursor + ok.astype(jnp.int32),
+        ver=s.ver, val=s.val,
+        lat_hist=_note_latency(s.lat_hist, st, ok, s.streams, s.cursor),
+        check_fails=s.check_fails + fails,
+        rounds=s.rounds + jnp.sum(do.astype(jnp.int32)))
+
+
+def _remote_turn(wl, s: ServeState, wg) -> ServeState:
+    """Serializing reference turn — the one-hot batched turn."""
+    return _remote_turn_b(wl, s, harness.one_hot(wl.cfg.n_agents, wg))
+
+
+def build_workload(cfg: Config, proto: P.Protocol) -> harness.Workload:
+    return harness.Workload(
+        name="kv_serving", cfg=cfg, proto=proto, has_remote=True,
+        can_local=_can_local, can_remote=_can_remote,
+        local_turn=_local_turn, remote_turn=_remote_turn,
+        remote_bound=_remote_bound, live=_live,
+        remote_turn_b=_remote_turn_b, remote_addr=_remote_addr,
+        retire=_retire, admit=_admit)
+
+
+def init_state(wl, seed) -> ServeState:
+    """Pure-jnp init (vmappable over `seed`): the whole request trace is
+    regenerated from (seed, config) — the bitwise-replay contract."""
+    cfg = wl.cfg
+    tr = TR.generate(cfg.traffic, cfg.n_agents, cfg.n_pages, seed)
+    streams = D.from_trace(tr, cfg.n_agents,
+                           cfg.traffic.requests_per_agent)
+    return ServeState(
+        store=P.make_store(cfg.proto_cfg()),
+        streams=streams,
+        cursor=jnp.zeros((cfg.n_agents,), jnp.int32),
+        ver=jnp.zeros((cfg.n_pages,), jnp.int32),
+        val=jnp.zeros((cfg.n_pages,), jnp.int32),
+        lat_hist=jnp.zeros((metrics.N_BUCKETS,), jnp.int32),
+        check_fails=jnp.int32(0),
+        rounds=jnp.int32(0))
+
+
+def self_check(wl, final: ServeState) -> dict:
+    """In-run stale reads + offered/completed accounting + drained-L2
+    per-page audit, plus the request-latency histogram for the sweep's
+    serving columns."""
+    cfg = wl.cfg
+    pc = cfg.proto_cfg()
+    fails = int(final.check_fails)
+    cursor = np.asarray(final.cursor)
+    quota = np.asarray(final.streams.quota)
+    done = bool(np.all(cursor >= quota))
+    st = harness.drain_all(pc, final.store)
+    l2 = np.asarray(st.l2).reshape(-1)
+    ver = np.asarray(final.ver)
+    val = np.asarray(final.val)
+    for p in range(cfg.n_pages):
+        base = p * cfg.bstride
+        fails += int(l2[base + 1] != ver[p]) + int(l2[base + 2] != val[p])
+    hist = np.asarray(final.lat_hist, np.int64)
+    lat = metrics.summarize(hist)
+    offered = cfg.n_agents * cfg.traffic.requests_per_agent
+    completed = int(cursor.sum())
+    # completed requests carry exactly one latency sample each
+    fails += int(lat["count"] != completed)
+    return {"ok": fails == 0 and done, "check_fails": fails,
+            "done": done, "events": int(final.rounds),
+            "offered": offered, "completed": completed,
+            "latency_hist": hist.tolist(), "latency": lat}
+
+
+def build(scenario: str, n_agents: int, seed: int = 0, *,
+          proto: P.Protocol = None, **kw) -> harness.Bench:
+    return harness.make_bench(Config(n_agents=n_agents, **kw),
+                              build_workload, init_state, self_check,
+                              scenario, seed, proto)

@@ -68,6 +68,24 @@ runs ONE masked local turn).  The A/B asserts identical modeled
 makespans (the §12 equivalence argument in vivo) and reports
 `steady_speedup_fused`.
 
+Schema v8 additions (traffic subsystem PR, DESIGN.md §13): per-run
+`offered_load` / `completed` / `zipf_s` / `burstiness` columns (None on
+self-driven workloads) and `latency_source` — trace-driven rows
+(kv_serving) fill the latency percentiles from their per-REQUEST
+completion-latency histogram (state-resident, populated with tracing
+compiled off; pooled across replicas), self-driven rows keep the §11
+per-turn trace source.  Plus the `serving` section: kv_serving at
+`--serving-sizes` under Zipf skew `--serving-zipf` (s ∈ {0.9, 1.2}),
+srsp batched vs srsp fused (asserted: same makespan, completed count and
+latency histogram — the same generated trace replayed bitwise across
+engines) vs rsp batched, reporting `srsp_vs_rsp_makespan` and
+`srsp_vs_rsp_p99` per skew (auto-gated by benchmarks/compare.py), and
+ONE serving-scale cell: >= 1e6 simulated requests replayed through the
+vmapped fused path per scenario (srsp/rsp/baseline), self-checks green.
+A second churned robustness cell runs kv_serving under the pinned
+crash_holding_lock + CRASH-event recovery (tests/test_kv_serving.py pins
+the same numbers).
+
 Schema v4 additions (scope-parametric ISA PR, DESIGN.md §9): per-run
 `api` ("scoped" — every workload issues ops through `repro.core.ops`)
 and `remote_batch` (whether the workload×protocol pair can co-schedule
@@ -110,11 +128,12 @@ import jax.numpy as jnp
 from repro import workloads
 from repro.core import protocol as P
 from repro.kernels import common as kcommon
-from repro.obs import export as obs_export, trace as T
+from repro.obs import export as obs_export, metrics, trace as T
 from repro.runtime import fault as rtfault
+from repro.traffic.samplers import TrafficConfig
 from repro.workloads import faults, harness
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 DEFAULT_SCENARIOS = ["baseline", "scope_only", "rsp", "srsp"]
 
 # per-cell hang budget for the watchdog (seconds)
@@ -225,13 +244,46 @@ def _latency_cols(store) -> dict:
     return T.summary(store)
 
 
+def _traffic_cols(wl, checks) -> dict:
+    """Schema-v8 columns (DESIGN.md §13): offered vs completed request
+    totals (summed across replicas) and the traffic shape that generated
+    them.  Self-driven workloads carry None — the column distinguishes
+    'no traffic model' from 'zero requests'."""
+    if not checks or "offered" not in checks[0]:
+        return {"offered_load": None, "completed": None,
+                "zipf_s": None, "burstiness": None}
+    tc = wl.cfg.traffic
+    return {"offered_load": int(sum(c["offered"] for c in checks)),
+            "completed": int(sum(c["completed"] for c in checks)),
+            "zipf_s": tc.zipf_s, "burstiness": tc.burstiness}
+
+
+def _request_latency(rec, checks) -> None:
+    """Trace-driven rows (schema v8) report latency percentiles of the
+    per-REQUEST completion histogram — state-resident, so populated even
+    with tracing compiled off — pooled across replicas.  Self-driven
+    rows keep the §11 per-turn trace source (when REPRO_TRACE=1)."""
+    if checks and "latency_hist" in checks[0]:
+        pooled = np.sum([np.asarray(c["latency_hist"], np.int64)
+                         for c in checks], axis=0)
+        lat = metrics.summarize(pooled)
+        rec.update({"latency_p50": lat["p50"], "latency_p95": lat["p95"],
+                    "latency_p99": lat["p99"],
+                    "latency_turns": lat["count"],
+                    "latency_source": "requests"})
+    else:
+        rec["latency_source"] = "turns" if rec.get("trace_events") \
+            else None
+
+
 def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters,
-                    engine="batched"):
+                    engine="batched", build_kw=None):
     """One compiled `runner_many(engine)` call per cell; replicas ride
     the vmap.  engine="fused" times the one-kernel batched trip
-    (schema v7, DESIGN.md §12)."""
+    (schema v7, DESIGN.md §12).  `build_kw` overrides workload-config
+    fields (the v8 serving section's traffic shapes)."""
     run_many = harness.runner_many(engine)
-    bench = mod.build(scenario, n_agents, seed=0)
+    bench = mod.build(scenario, n_agents, seed=0, **(build_kw or {}))
     wl = bench.wl
 
     def states(base):
@@ -258,7 +310,7 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters,
     lane = _lane0(out)
     counters = harness.counters_dict(lane.store)
     steady = float(np.mean(times))
-    return {
+    rec = {
         "workload": name, "scenario": scenario, "n_agents": n_agents,
         "engine": engine, "kernel_mode": kcommon.kernel_mode(),
         "vmapped": True, "n_replicas": n_seeds,
@@ -268,6 +320,7 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters,
         "steady_s_per_run": round(steady, 5),
         "steady_s_per_replica": round(steady / n_seeds, 5),
         **_churn_cols(), **_latency_cols(lane.store),
+        **_traffic_cols(wl, checks),
         "events": int(lane.rounds),
         "check_ok": all(c["ok"] for c in checks),
         "check_fails": int(sum(c["check_fails"] for c in checks)),
@@ -275,6 +328,8 @@ def measure_vmapped(mod, name, scenario, n_agents, n_seeds, iters,
         "counters": counters,
         "_trace_store": lane.store,
     }
+    _request_latency(rec, checks)
+    return rec
 
 
 def measure_host_init(mod, name, scenario, n_agents, iters,
@@ -298,7 +353,7 @@ def measure_host_init(mod, name, scenario, n_agents, iters,
         check = b.check(out)
 
     counters = harness.counters_dict(out.store)
-    return {
+    rec = {
         "workload": name, "scenario": scenario, "n_agents": n_agents,
         "engine": engine, "kernel_mode": kcommon.kernel_mode(),
         "vmapped": False, "n_replicas": 1,
@@ -308,6 +363,7 @@ def measure_host_init(mod, name, scenario, n_agents, iters,
         "steady_s_per_run": round(float(np.mean(times)), 5),
         "steady_s_per_replica": round(float(np.mean(times)), 5),
         **_churn_cols(), **_latency_cols(out.store),
+        **_traffic_cols(bench.wl, [check]),
         "events": int(out.rounds),
         "check_ok": bool(check["ok"]),
         "check_fails": int(check["check_fails"]),
@@ -315,6 +371,8 @@ def measure_host_init(mod, name, scenario, n_agents, iters,
         "counters": counters,
         "_trace_store": out.store,
     }
+    _request_latency(rec, [check])
+    return rec
 
 
 # ---------------- subprocess A/Bs (donation / packed metadata) -------------
@@ -421,7 +479,7 @@ def measure_churned_cell(iters):
 
     counters = harness.counters_dict(fin.s.store)
     recovered = float(np.sum(np.asarray(fin.s.store.counters.recoveries)))
-    return {
+    rec = {
         "workload": "worksteal", "scenario": "srsp", "n_agents": 4,
         "engine": "batched_elastic", "kernel_mode": kcommon.kernel_mode(),
         "vmapped": False, "n_replicas": 1,
@@ -433,7 +491,7 @@ def measure_churned_cell(iters):
         **_churn_cols(churn_events=1, makespan=counters["makespan"],
                       recovered=recovered,
                       lost_updates=check["check_fails"]),
-        **_latency_cols(fin.s.store),
+        **_latency_cols(fin.s.store), **_traffic_cols(wl, []),
         "events": int(check["events"]),
         "check_ok": bool(check["ok"]),
         "check_fails": int(check["check_fails"]),
@@ -441,6 +499,65 @@ def measure_churned_cell(iters):
         "counters": counters,
         "_trace_store": fin.s.store,
     }
+    _request_latency(rec, [])
+    return rec
+
+
+# -------- churned serving cell (schema v8, DESIGN.md §13 + §10) ------------
+
+def measure_churned_serving(iters):
+    """kv_serving under the pinned die-holding-lock crash
+    (crash_holding_lock victim 0 at clock 30; CRASH churn event at clock
+    180 — tests/test_kv_serving.py pins the same numbers) on the batched
+    elastic engine, single page per agent so the wedged victim strands
+    exactly one lock.  The recovery drain must write back the victim's
+    committed pages and force-release the stranded lock, after which the
+    survivors' Zipf-skewed lookups of the dead shard's hot page complete
+    — self-check clean, no lost pages, no stale reads."""
+    mod = workloads.get("kv_serving")
+    victim, at, evt = 0, 30.0, 180.0
+    proto = faults.crash_holding_lock(P.get_protocol("srsp"), victim, at)
+
+    def one():
+        b = mod.build("srsp", 4, seed=3, proto=proto, pages_per_agent=1)
+        eb = harness.make_elastic(b, events=[(evt, victim, "crash")])
+        fin = harness.run_batched_elastic(eb.wl, eb.state, *eb.ops)
+        jax.block_until_ready(fin.s.store.counters.cycles)
+        return b.wl, fin, eb.check(fin)
+
+    t0 = time.perf_counter()
+    wl, fin, check = one()
+    compile_s = time.perf_counter() - t0
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        wl, fin, check = one()
+        times.append(time.perf_counter() - t0)
+
+    counters = harness.counters_dict(fin.s.store)
+    recovered = float(np.sum(np.asarray(fin.s.store.counters.recoveries)))
+    rec = {
+        "workload": "kv_serving", "scenario": "srsp", "n_agents": 4,
+        "engine": "batched_elastic", "kernel_mode": kcommon.kernel_mode(),
+        "vmapped": False, "n_replicas": 1,
+        "table_geometry": _geometry(wl), **_api_cols(wl),
+        "iters_timed": iters,
+        "compile_s": round(compile_s, 4),
+        "steady_s_per_run": round(float(np.mean(times)), 5),
+        "steady_s_per_replica": round(float(np.mean(times)), 5),
+        **_churn_cols(churn_events=1, makespan=counters["makespan"],
+                      recovered=recovered,
+                      lost_updates=check["check_fails"]),
+        **_latency_cols(fin.s.store), **_traffic_cols(wl, [check]),
+        "events": int(check["events"]),
+        "check_ok": bool(check["ok"]),
+        "check_fails": int(check["check_fails"]),
+        "makespan": counters["makespan"],
+        "counters": counters,
+        "_trace_store": fin.s.store,
+    }
+    _request_latency(rec, [check])
+    return rec
 
 
 # ---------------- remote-batch A/B (schema v4, DESIGN.md §9) ---------------
@@ -561,6 +678,22 @@ def main(argv=None):
     ap.add_argument("--fuse-sizes", nargs="+", type=int, default=[64, 256])
     ap.add_argument("--no-churn", action="store_true",
                     help="skip the churned crash-recovery cell")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="skip the trace-driven serving sections "
+                         "(schema v8: skewed-traffic comparison + scale "
+                         "cell; the grid kv_serving rows still run)")
+    ap.add_argument("--serving-sizes", nargs="+", type=int, default=[64])
+    ap.add_argument("--serving-zipf", nargs="+", type=float,
+                    default=[0.9, 1.2],
+                    help="Zipf skew exponents for the serving comparison")
+    ap.add_argument("--serving-requests", type=int, default=256,
+                    help="requests per agent in each serving cell")
+    ap.add_argument("--serving-seeds", type=int, default=2,
+                    help="replicas per serving comparison cell")
+    ap.add_argument("--serving-scale-replicas", type=int, default=64,
+                    help="replicas for the >=1e6-request scale cell "
+                         "(0 disables; 64 x n=64 x 256 req = 1,048,576 "
+                         "simulated requests per scenario)")
     ap.add_argument("--trace-out", default="TRACE_sweep.json",
                     help="Perfetto trace JSON for one traced srsp cell "
                          "(only written under REPRO_TRACE=1)")
@@ -629,6 +762,115 @@ def main(argv=None):
               f"churn_rate={rec['churn_rate']}/kcycle", flush=True)
         jax.clear_caches()
 
+    if not args.no_churn and "kv_serving" in names:
+        label = "kv_serving/srsp+crash/churned"
+        wd.start(label)
+        with jax.profiler.TraceAnnotation(f"cell:{label}"):
+            rec = measure_churned_serving(args.iters)
+        wd.stop()
+        harvest(rec, label)
+        runs.append(rec)
+        print(f"churned kv_serving/srsp (crash victim 0): "
+              f"check_ok={rec['check_ok']} recovered={rec['recovered']:.0f} "
+              f"lost_updates={rec['lost_updates']} "
+              f"completed={rec['completed']}/{rec['offered_load']}",
+              flush=True)
+        jax.clear_caches()
+
+    # ---- trace-driven serving sections (schema v8, DESIGN.md §13) ----
+    serving = []
+    serving_comparisons = {}
+    if not args.no_serving:
+        kv_mod = workloads.get("kv_serving")
+        for n in args.serving_sizes:
+            for s in args.serving_zipf:
+                tc = TrafficConfig(requests_per_agent=args.serving_requests,
+                                   zipf_s=s, gap_mean=8.0, burstiness=4.0,
+                                   remote_frac=0.03)
+                cell = {}
+                for scen, engine in (("srsp", "batched"), ("srsp", "fused"),
+                                     ("rsp", "batched")):
+                    label = (f"serving/kv_serving/{scen}/zipf={s}"
+                             f"/n={n}/{engine}")
+                    t0 = time.perf_counter()
+                    wd.start(label)
+                    with jax.profiler.TraceAnnotation(f"cell:{label}"):
+                        rec = measure_vmapped(
+                            kv_mod, "kv_serving", scen, n,
+                            args.serving_seeds, args.iters, engine,
+                            build_kw={"traffic": tc})
+                    wd.stop()
+                    rec.pop("_trace_store", None)
+                    rec["bench_wall_s"] = round(time.perf_counter() - t0, 2)
+                    serving.append(rec)
+                    cell[(scen, engine)] = rec
+                    print(f"{label}: "
+                          f"steady={rec['steady_s_per_run']:.2f}s "
+                          f"completed={rec['completed']}"
+                          f"/{rec['offered_load']} "
+                          f"p99={rec['latency_p99']} "
+                          f"check_ok={rec['check_ok']}", flush=True)
+                jax.clear_caches()
+                sb = cell[("srsp", "batched")]
+                sf = cell[("srsp", "fused")]
+                rb = cell[("rsp", "batched")]
+                # same (seed, config) trace replayed through both engines:
+                # the fused trip is bitwise the batched schedule, so every
+                # modeled column must agree exactly
+                assert sf["makespan"] == sb["makespan"], (sf, sb)
+                assert sf["completed"] == sb["completed"], (sf, sb)
+                assert sf["latency_p99"] == sb["latency_p99"], (sf, sb)
+                serving_comparisons[f"serving/kv_serving/zipf={s}/n={n}"] = {
+                    "srsp_vs_rsp_makespan": round(
+                        rb["makespan"] / sb["makespan"], 3),
+                    "srsp_vs_rsp_p99": round(
+                        rb["latency_p99"] / max(sb["latency_p99"], 1.0), 3),
+                    "engines_bitwise": True,
+                    "offered_load": sb["offered_load"],
+                    "completed": sb["completed"]}
+
+        if args.serving_scale_replicas > 0:
+            tc = TrafficConfig(requests_per_agent=256, zipf_s=1.2,
+                               gap_mean=8.0, burstiness=4.0,
+                               remote_frac=0.01)
+            n = 64
+            scale = {}
+            for scen in ("srsp", "rsp", "baseline"):
+                label = f"serving-scale/kv_serving/{scen}/n={n}/fused"
+                t0 = time.perf_counter()
+                wd.start(label)
+                with jax.profiler.TraceAnnotation(f"cell:{label}"):
+                    rec = measure_vmapped(
+                        kv_mod, "kv_serving", scen, n,
+                        args.serving_scale_replicas, 1, "fused",
+                        build_kw={"traffic": tc})
+                wd.stop()
+                rec.pop("_trace_store", None)
+                rec["bench_wall_s"] = round(time.perf_counter() - t0, 2)
+                serving.append(rec)
+                scale[scen] = rec
+                wall = rec["steady_s_per_run"]
+                print(f"{label}: {rec['completed']}/{rec['offered_load']} "
+                      f"requests in {wall:.1f}s "
+                      f"({rec['completed'] / max(wall, 1e-9):,.0f} req/s) "
+                      f"p99={rec['latency_p99']} "
+                      f"check_ok={rec['check_ok']}", flush=True)
+                jax.clear_caches()
+            assert all(r["check_ok"] for r in scale.values()), scale
+            serving_comparisons[f"serving_scale/kv_serving/zipf=1.2/n={n}"] \
+                = {"offered_load": scale["srsp"]["offered_load"],
+                   "completed": scale["srsp"]["completed"],
+                   "all_checks_ok": True,
+                   "srsp_vs_rsp_makespan": round(
+                       scale["rsp"]["makespan"]
+                       / scale["srsp"]["makespan"], 3),
+                   "srsp_vs_rsp_p99": round(
+                       scale["rsp"]["latency_p99"]
+                       / max(scale["srsp"]["latency_p99"], 1.0), 3),
+                   "srsp_vs_baseline_makespan": round(
+                       scale["baseline"]["makespan"]
+                       / scale["srsp"]["makespan"], 3)}
+
     trace_file = None
     if trace_store is not None and args.trace_out:
         obs_export.write_trace(args.trace_out, trace_store,
@@ -647,6 +889,7 @@ def main(argv=None):
 
     # paper-style protocol comparisons on modeled makespan + L2 traffic
     comparisons = {}
+    comparisons.update(serving_comparisons)
     churned = [r for r in runs if r["churn_events"]]
     for r in churned:
         comparisons[f"churn/{r['workload']}/n={r['n_agents']}"] = {
@@ -843,7 +1086,27 @@ def main(argv=None):
                        "local batch exists while the fused plan computes "
                        "it every trip — those rows can dip below 1.0x "
                        "(0.80x at n=64); the vmapped rows and fuse_ab "
-                       "carry the perf claim.",
+                       "carry the perf claim. Schema v8 (DESIGN.md SS13): "
+                       "offered_load/completed/zipf_s/burstiness columns "
+                       "on trace-driven cells (null elsewhere) and "
+                       "latency_source marks whether latency_p50/p95/p99 "
+                       "summarize per-request completion latency "
+                       "(='requests', always on for trace-driven cells: "
+                       "completion clock minus arrival clock from the "
+                       "replayed trace) or the per-turn REPRO_TRACE "
+                       "histogram (='turns'). The serving section replays "
+                       "the SAME (seed, config) Zipf+bursty trace through "
+                       "the batched and fused engines (asserted equal "
+                       "makespan/completed/p99) and reports "
+                       "srsp_vs_rsp_makespan and srsp_vs_rsp_p99 under "
+                       "skew s in {0.9, 1.2}; the scale cell pushes "
+                       ">=1e6 simulated requests per scenario through the "
+                       "vmapped fused path with self-checks green on "
+                       "srsp/rsp/baseline. The churned kv_serving cell "
+                       "crashes a shard owner holding its page lock "
+                       "mid-trace: the lease recovery drain must "
+                       "force-release it and survivors finish with no "
+                       "lost pages and no stale reads.",
         "backend": jax.default_backend(),
         "donate_buffers": harness.DONATE,
         "packed_metadata": P.PACKED,
@@ -854,8 +1117,16 @@ def main(argv=None):
         "stragglers": wd.stragglers,
         "config": {"workloads": names, "scenarios": args.scenarios,
                    "sizes": args.sizes, "seeds": args.seeds,
-                   "iters": args.iters},
+                   "iters": args.iters,
+                   "serving": None if args.no_serving else {
+                       "sizes": args.serving_sizes,
+                       "zipf": args.serving_zipf,
+                       "requests_per_agent": args.serving_requests,
+                       "seeds": args.serving_seeds,
+                       "scale_replicas": args.serving_scale_replicas,
+                       "gap_mean": 8.0, "burstiness": 4.0}},
         "runs": runs,
+        "serving": serving,
         "donation_ab": donation,
         "pack_ab": pack_ab,
         "remote_batch_ab": remote_batch_ab,

@@ -1,0 +1,181 @@
+"""kv_serving workload contracts (ISSUE 9, DESIGN.md §13).
+
+The serving workload replays a trace-driven request stream (Zipf-skewed
+keys, bursty arrivals, read/write mix) against hot KV-page ownership.
+Contracts, mirroring tests/test_workloads.py + tests/test_churn.py:
+
+1. **engine equivalence** — serial, batched and fused runs of the SAME
+   (seed, config) trace agree bitwise on every state leaf (T.strip).
+2. **self-check soundness** — srsp/rsp/baseline finish every offered
+   request with no lost pages and no stale reads, and the per-request
+   latency histogram accounts for exactly the completed requests.
+3. **self-check power** — faults.no_promotion and scope_only staleness
+   are both caught (red), so the green runs mean something.
+4. **vmapped replicas** — every lane of `run_batched_many` equals its
+   solo run (the sweep's ≥1e6-request scale cell rides this path).
+5. **elastic/churn** — zero churn is bitwise invisible; the pinned
+   die-holding-lock crash (victim 0 at clock 30, CRASH event at 180,
+   one page per agent so exactly one lock strands) is GREEN with the
+   lease recovery drain and RED without it (survivors wedge on the
+   stranded hot page and the run cannot complete).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import workloads
+from repro.core import protocol as P
+from repro.obs import trace as T
+from repro.traffic.samplers import TrafficConfig
+from repro.workloads import faults, harness
+
+N_AGENTS = 4
+SEED = 3
+VICTIM, CRASH_AT, CRASH_EVT = 0, 30.0, 180.0   # sweep pins the same cell
+
+
+def _build(scenario, proto=None, seed=SEED, **kw):
+    return workloads.get("kv_serving").build(scenario, N_AGENTS, seed=seed,
+                                             proto=proto, **kw)
+
+
+def _run(scenario, engine, proto=None, seed=SEED, **kw):
+    b = _build(scenario, proto=proto, seed=seed, **kw)
+    final = harness.runner(engine)(b.wl, b.state, *b.ops)
+    return final, b.check
+
+
+def _assert_bitwise_equal(a, b, ctx):
+    a, b = T.strip(a), T.strip(b)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=str(ctx))
+
+
+def test_serial_batched_fused_bitwise_equivalent():
+    ser, check = _run("srsp", "serial")
+    bat, _ = _run("srsp", "batched")
+    fus, _ = _run("srsp", "fused")
+    _assert_bitwise_equal(ser, bat, ("kv_serving", "srsp", "batched"))
+    _assert_bitwise_equal(ser, fus, ("kv_serving", "srsp", "fused"))
+    res = check(ser)
+    assert res["ok"] and res["done"], res
+    jax.clear_caches()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", ["rsp", "baseline"])
+def test_engines_equivalent_other_scenarios(scenario):
+    ser, check = _run(scenario, "serial")
+    bat, _ = _run(scenario, "batched")
+    fus, _ = _run(scenario, "fused")
+    _assert_bitwise_equal(ser, bat, ("kv_serving", scenario, "batched"))
+    _assert_bitwise_equal(ser, fus, ("kv_serving", scenario, "fused"))
+    assert check(ser)["ok"], scenario
+    jax.clear_caches()
+
+
+def test_every_offered_request_completes_with_latency_accounted():
+    fin, check = _run("srsp", "batched")
+    res = check(fin)
+    assert res["ok"], res
+    assert res["completed"] == res["offered"] > 0
+    lat = res["latency"]
+    assert lat["count"] == res["completed"]
+    assert 0 < lat["p50"] <= lat["p95"] <= lat["p99"]
+
+
+def test_traffic_config_rides_build_kw():
+    tc = TrafficConfig(requests_per_agent=8, zipf_s=1.3, burstiness=4.0)
+    fin, check = _run("srsp", "batched", traffic=tc)
+    res = check(fin)
+    assert res["ok"], res
+    assert res["offered"] == N_AGENTS * tc.requests_per_agent
+
+
+def test_no_promotion_is_caught():
+    broken = faults.no_promotion(P.get_protocol("srsp"))
+    fin, check = _run("srsp", "batched", proto=broken)
+    res = check(fin)
+    assert not res["ok"], res
+    jax.clear_caches()
+
+
+def test_scope_only_staleness_is_caught():
+    fin, check = _run("scope_only", "batched")
+    res = check(fin)
+    assert not res["ok"], res
+    assert res["check_fails"] > 0, res
+    jax.clear_caches()
+
+
+def test_vmapped_replicas_match_solo_runs():
+    m = workloads.get("kv_serving")
+    b = m.build("srsp", N_AGENTS, seed=0)
+    states = jax.vmap(lambda s: m.init_state(b.wl, s))(jnp.arange(2))
+    outs = harness.run_batched_many(b.wl, states)
+    for k in range(2):
+        solo = m.build("srsp", N_AGENTS, seed=k)
+        ref = harness.run_batched(solo.wl, solo.state)
+        lane = jax.tree.map(lambda x: x[k], outs)
+        # rounds may drift (finished replicas idle while stragglers run)
+        _assert_bitwise_equal(ref._replace(rounds=jnp.int32(0)),
+                              lane._replace(rounds=jnp.int32(0)), k)
+        assert m.self_check(solo.wl, lane)["ok"]
+    jax.clear_caches()
+
+
+def test_zero_churn_elastic_pin():
+    b = _build("srsp")
+    ref = harness.run_batched(b.wl, b.state, *b.ops)
+    b2 = _build("srsp")
+    eb = harness.make_elastic(b2)
+    fin = harness.run_batched_elastic(eb.wl, eb.state, *eb.ops)
+    _assert_bitwise_equal(ref, fin.s, "kv_serving zero-churn")
+    assert bool(np.all(np.asarray(fin.alive)))
+    jax.clear_caches()
+
+
+def _run_crash(proto):
+    b = _build("srsp", proto=proto, pages_per_agent=1)
+    eb = harness.make_elastic(b, events=[(CRASH_EVT, VICTIM, "crash")])
+    fin = harness.run_batched_elastic(eb.wl, eb.state, *eb.ops)
+    return fin, eb.check(fin)
+
+
+@pytest.mark.parametrize("seed", [0, SEED])
+def test_crash_with_recovery_drain_is_green(seed):
+    """The owner of the hottest shard dies holding its page lock; the
+    recovery drain writes its committed pages back and force-releases the
+    lock, so survivors' skewed lookups of that page all complete."""
+    proto = faults.crash_holding_lock(P.get_protocol("srsp"), VICTIM,
+                                      CRASH_AT)
+    b = workloads.get("kv_serving").build("srsp", N_AGENTS, seed=seed,
+                                          proto=proto, pages_per_agent=1)
+    eb = harness.make_elastic(b, events=[(CRASH_EVT, VICTIM, "crash")])
+    fin = harness.run_batched_elastic(eb.wl, eb.state, *eb.ops)
+    res = eb.check(fin)
+    assert res["ok"] and res["done"], res
+    assert float(np.sum(np.asarray(
+        fin.s.store.counters.recoveries))) >= 1.0
+    assert not bool(np.asarray(fin.alive)[VICTIM])
+    # the victim's unserved tail was forgiven, not silently completed
+    assert res["completed"] < res["offered"], res
+    jax.clear_caches()
+
+
+def test_crash_without_recovery_is_red():
+    """Same crash, lease never expires: the stranded hot-page lock wedges
+    every survivor that needs it — the run must terminate (loop guard)
+    and report incompletion, never silent corruption."""
+    proto = faults.lease_never_expires(faults.crash_holding_lock(
+        P.get_protocol("srsp"), VICTIM, CRASH_AT))
+    fin, res = _run_crash(proto)
+    assert not res["ok"], res
+    assert not res["done"], res
+    assert float(np.sum(np.asarray(
+        fin.s.store.counters.recoveries))) == 0.0
+    jax.clear_caches()

@@ -280,24 +280,40 @@ def test_compare_improvements_are_not_failures(tmp_path):
                  tmp_path=tmp_path) == 0
 
 
-def test_check_smoke_rejects_v5_accepts_v6():
-    v6 = _bench_doc()
-    v6.update(remote_batch_ab=[{"check_ok": True}],
+def test_check_smoke_rejects_old_schema_accepts_v8():
+    v8 = _bench_doc()
+    v8.update(schema_version=8, kernel_mode="ref",
+              remote_batch_ab=[{"check_ok": True}],
               trace={"enabled": False, "capacity": 0, "file": None,
                      "cell": None},
               stragglers=[])
-    v6["runs"][0].update(api="scoped", remote_batch=True, churn_events=1,
-                         recovered=1, lost_updates=0)
-    assert check_smoke.check(v6, expect_trace=False) == []
-    v5 = json.loads(json.dumps(v6))
-    v5["schema_version"] = 5
-    del v5["runs"][0]["latency_p99"]
-    fails = check_smoke.check(v5, expect_trace=False)
+    v8["runs"][0].update(api="scoped", remote_batch=True, churn_events=1,
+                         recovered=1, lost_updates=0, kernel_mode="ref",
+                         offered_load=None, completed=None, zipf_s=None,
+                         burstiness=None, latency_source="turns")
+    # v7 fused twin (same makespan) + v8 trace-driven kv_serving cell
+    v8["runs"].append(dict(v8["runs"][0], engine="fused", churn_events=0))
+    v8["runs"].append(dict(v8["runs"][0], workload="kv_serving",
+                           churn_events=0, offered_load=96, completed=96,
+                           zipf_s=1.1, burstiness=1.0,
+                           latency_source="requests"))
+    assert check_smoke.check(v8, expect_trace=False) == []
+    old = json.loads(json.dumps(v8))
+    old["schema_version"] = 7
+    del old["runs"][0]["latency_p99"]
+    del old["runs"][2]["offered_load"]
+    fails = check_smoke.check(old, expect_trace=False)
     assert any("schema_version" in f for f in fails)
     assert any("latency columns" in f for f in fails)
+    assert any("traffic columns" in f for f in fails)
+    # a kv_serving cell that silently drops requests must be flagged
+    lossy = json.loads(json.dumps(v8))
+    lossy["runs"][2]["completed"] = 40
+    assert any("dropped requests" in f
+               for f in check_smoke.check(lossy, expect_trace=False))
     # --expect-trace on an untraced doc must fail loudly
     assert any("tracing was off" in f
-               for f in check_smoke.check(v6, expect_trace=True))
+               for f in check_smoke.check(v8, expect_trace=True))
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,261 @@
+"""Trace-driven traffic subsystem properties (ISSUE 9, DESIGN.md §13).
+
+Property tests over the three layers:
+
+1. **samplers** — Zipf rank frequencies are monotone non-increasing in
+   rank; arrival clocks are sorted and non-negative for every
+   (gap_mean, burstiness, burst_len) cell; burstiness=1.0 degenerates to
+   Poisson (the burst envelope becomes the identity, so `burst_len`
+   cannot matter).
+2. **trace** — `generate` is bitwise-replayable from (seed, config),
+   distinct seeds actually differ, cross-owner requests are forced to
+   reads, and `save`/`load` round-trips columns + provenance exactly.
+3. **driver** — `from_trace` regroups without losing requests, per-agent
+   streams stay arrival-sorted, `lbnr` matches a host-side reference
+   loop, and retire/admit move only the quota (never the columns).
+
+The properties run on a seeded parameter grid so they hold without any
+external dependency; when Hypothesis is installed the replay property
+additionally fuzzes over random seeds.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.traffic import driver as D
+from repro.traffic import samplers as S
+from repro.traffic import trace as TR
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # container has no hypothesis; the grid versions
+    HAVE_HYPOTHESIS = False   # of every property still run
+
+N_AGENTS = 4
+N_KEYS = 8
+
+
+def _cfg(**kw):
+    return dataclasses.replace(S.TrafficConfig(), **kw)
+
+
+# --------------------------------------------------------------- samplers
+
+@pytest.mark.parametrize("s", [0.9, 1.1, 1.5])
+def test_zipf_frequency_monotone_in_rank(s):
+    """More popular (lower) ranks must be drawn at least as often."""
+    ranks = S.zipf_ranks(jax.random.PRNGKey(7), 40_000, N_KEYS, s)
+    counts = np.bincount(np.asarray(ranks), minlength=N_KEYS)
+    assert counts.sum() == 40_000
+    assert np.all(np.diff(counts) <= 0), counts
+
+
+def test_zipf_ranks_in_range():
+    ranks = np.asarray(S.zipf_ranks(jax.random.PRNGKey(3), 4096, N_KEYS, 1.2))
+    assert ranks.min() >= 0 and ranks.max() < N_KEYS
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("burstiness,burst_len", [(1.0, 8), (4.0, 8),
+                                                  (4.0, 3), (16.0, 1)])
+def test_arrivals_sorted_and_nonnegative(seed, burstiness, burst_len):
+    cfg = _cfg(burstiness=burstiness, burst_len=burst_len, gap_mean=16.0)
+    arr = np.asarray(S.arrival_clocks(jax.random.PRNGKey(seed), 64, cfg))
+    assert np.all(arr >= 0.0)
+    assert np.all(np.diff(arr) >= 0.0)
+
+
+def test_burstiness_one_is_poisson():
+    """With burstiness=1.0 the on/off envelope is identically 1.0, so the
+    phase geometry (burst_len) cannot change a single clock."""
+    key = jax.random.PRNGKey(11)
+    a = S.arrival_clocks(key, 64, _cfg(burstiness=1.0, burst_len=8))
+    b = S.arrival_clocks(key, 64, _cfg(burstiness=1.0, burst_len=3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bursty_arrivals_cluster():
+    """burstiness >> 1 must raise gap variance over Poisson (same draws)."""
+    key = jax.random.PRNGKey(5)
+    flat = np.diff(np.asarray(S.arrival_clocks(key, 512, _cfg())))
+    bursty = np.diff(np.asarray(S.arrival_clocks(
+        key, 512, _cfg(burstiness=8.0))))
+    assert bursty.var() > 2.0 * flat.var()
+
+
+def test_request_kinds_and_remote_draws_are_bernoulli_like():
+    kinds = np.asarray(S.request_kinds(jax.random.PRNGKey(2), 4096, 0.25))
+    assert set(np.unique(kinds)) <= {0, 1}
+    assert 0.15 < kinds.mean() < 0.35
+    rem = np.asarray(S.remote_draws(jax.random.PRNGKey(2), 4096, 0.125))
+    assert rem.dtype == bool
+    assert 0.05 < rem.mean() < 0.20
+
+
+# ------------------------------------------------------------------ trace
+
+@pytest.mark.parametrize("seed", [0, 3, 17])
+def test_generate_is_bitwise_replayable(seed):
+    cfg = _cfg(requests_per_agent=32, burstiness=4.0)
+    a = TR.generate(cfg, N_AGENTS, N_KEYS, seed)
+    b = TR.generate(cfg, N_AGENTS, N_KEYS, seed)
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_distinct_seeds_differ():
+    cfg = _cfg(requests_per_agent=32)
+    a = TR.generate(cfg, N_AGENTS, N_KEYS, 0)
+    b = TR.generate(cfg, N_AGENTS, N_KEYS, 1)
+    assert not np.array_equal(np.asarray(a.key), np.asarray(b.key))
+
+
+def test_trace_shape_and_canonical_order():
+    cfg = _cfg(requests_per_agent=24)
+    tr = TR.generate(cfg, N_AGENTS, N_KEYS, 7)
+    m = N_AGENTS * cfg.requests_per_agent
+    assert all(len(c) == m for c in tr)
+    arr = np.asarray(tr.arrival)
+    assert np.all(np.diff(arr) >= 0.0)          # globally arrival-sorted
+    agent = np.asarray(tr.agent)
+    assert np.bincount(agent, minlength=N_AGENTS).tolist() \
+        == [cfg.requests_per_agent] * N_AGENTS
+
+
+def test_cross_owner_requests_are_reads():
+    tr = TR.generate(_cfg(requests_per_agent=64, remote_frac=0.5),
+                     N_AGENTS, N_KEYS, 9)
+    owner = np.asarray(TR.owner(tr.key, N_AGENTS))
+    kind = np.asarray(tr.kind)
+    agent = np.asarray(tr.agent)
+    remote = owner != agent
+    assert remote.any()                          # the property is exercised
+    assert np.all(kind[remote] == 0)
+
+
+def test_generate_rejects_ragged_placement():
+    with pytest.raises(ValueError):
+        TR.generate(_cfg(), n_agents=3, n_keys=8, seed=0)
+
+
+def test_save_load_roundtrip_bitwise(tmp_path):
+    cfg = _cfg(requests_per_agent=16, zipf_s=1.3, burstiness=2.0)
+    tr = TR.generate(cfg, N_AGENTS, N_KEYS, 5)
+    path = str(tmp_path / "trace.npz")
+    TR.save(path, tr, cfg=cfg, n_agents=N_AGENTS, n_keys=N_KEYS, seed=5)
+    tr2, meta = TR.load(path)
+    for la, lb in zip(tr, tr2):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert meta["config"] == cfg
+    assert (meta["n_agents"], meta["n_keys"], meta["seed"]) \
+        == (N_AGENTS, N_KEYS, 5)
+    # provenance closes the loop: regenerating from the saved meta
+    # reproduces the saved columns bitwise
+    tr3 = TR.generate(meta["config"], meta["n_agents"], meta["n_keys"],
+                      meta["seed"])
+    np.testing.assert_array_equal(np.asarray(tr.key), np.asarray(tr3.key))
+
+
+def test_generate_vmaps_over_seeds():
+    cfg = _cfg(requests_per_agent=8)
+    stack = jax.vmap(lambda s: TR.generate(cfg, N_AGENTS, N_KEYS, s))(
+        jnp.arange(3, dtype=jnp.uint32))
+    solo = TR.generate(cfg, N_AGENTS, N_KEYS, 2)
+    np.testing.assert_array_equal(np.asarray(stack.key[2]),
+                                  np.asarray(solo.key))
+
+
+# ----------------------------------------------------------------- driver
+
+def _streams(seed=7, m=32, **kw):
+    cfg = _cfg(requests_per_agent=m, **kw)
+    tr = TR.generate(cfg, N_AGENTS, N_KEYS, seed)
+    return TR.generate(cfg, N_AGENTS, N_KEYS, seed), \
+        D.from_trace(tr, N_AGENTS, m)
+
+
+def test_from_trace_preserves_requests_per_agent():
+    tr, st = _streams()
+    for a in range(N_AGENTS):
+        mine = np.asarray(tr.key)[np.asarray(tr.agent) == a]
+        np.testing.assert_array_equal(np.sort(np.asarray(st.key[a])),
+                                      np.sort(mine))
+        arr = np.asarray(st.arrival[a])
+        assert np.all(np.diff(arr) >= 0.0)       # per-lane order kept
+
+
+def test_lbnr_matches_reference_loop():
+    _, st = _streams(remote_frac=0.4)
+    rem = np.asarray(st.remote)
+    n, m = rem.shape
+    ref = np.zeros((n, m), np.int32)
+    for i in range(n):
+        run = 0
+        for j in reversed(range(m)):
+            run = 0 if rem[i, j] else run + 1
+            ref[i, j] = run
+    np.testing.assert_array_equal(np.asarray(st.lbnr), ref)
+
+
+def test_driver_predicates_partition_pending():
+    _, st = _streams(remote_frac=0.4)
+    cursor = jnp.zeros(N_AGENTS, jnp.int32)
+    loc = np.asarray(D.can_local(st, cursor))
+    rem = np.asarray(D.can_remote(st, cursor))
+    pend = np.asarray(D.pending(st, cursor))
+    assert np.all(loc ^ rem == pend) and not np.any(loc & rem)
+
+
+def test_remote_bound_fence_and_exhaustion():
+    _, st = _streams(remote_frac=0.4, m=8)
+    cursor = jnp.zeros(N_AGENTS, jnp.int32)
+    bound = np.asarray(D.remote_bound(st, cursor, 20.0))
+    np.testing.assert_allclose(bound,
+                               np.asarray(st.lbnr[:, 0]) * 20.0)
+    done = jnp.full(N_AGENTS, 8, jnp.int32)
+    assert np.all(np.asarray(D.remote_bound(st, done, 20.0)) >= 1e38)
+
+
+def test_wait_cycles_clamp():
+    _, st = _streams(m=8)
+    cursor = jnp.zeros(N_AGENTS, jnp.int32)
+    arr = np.asarray(st.arrival[:, 0])
+    early = np.asarray(D.wait_cycles(st, cursor,
+                                     jnp.zeros(N_AGENTS, jnp.float32)))
+    np.testing.assert_allclose(early, arr)
+    late = np.asarray(D.wait_cycles(
+        st, cursor, jnp.full(N_AGENTS, 1e9, jnp.float32)))
+    np.testing.assert_array_equal(late, np.zeros(N_AGENTS))
+
+
+def test_retire_admit_touch_only_quota():
+    _, st = _streams(m=8)
+    cursor = jnp.full(N_AGENTS, 3, jnp.int32)
+    dead = jnp.asarray([True, False, False, False])
+    st2 = D.retire(st, cursor, dead)
+    assert np.asarray(st2.quota).tolist() == [3, 8, 8, 8]
+    np.testing.assert_array_equal(np.asarray(st2.key), np.asarray(st.key))
+    st3 = D.admit(st2, cursor, dead)
+    assert np.asarray(st3.quota).tolist() == [4, 8, 8, 8]
+    # all-False churn is the identity (the elastic zero-churn contract)
+    st4 = D.retire(st, cursor, jnp.zeros(N_AGENTS, bool))
+    np.testing.assert_array_equal(np.asarray(st4.quota),
+                                  np.asarray(st.quota))
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_replay_any_seed(seed):
+        cfg = _cfg(requests_per_agent=8)
+        a = TR.generate(cfg, N_AGENTS, N_KEYS, seed)
+        b = TR.generate(cfg, N_AGENTS, N_KEYS, seed)
+        for la, lb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        arr = np.asarray(a.arrival)
+        assert np.all(arr >= 0.0) and np.all(np.diff(arr) >= 0.0)
